@@ -1,0 +1,67 @@
+"""Paper §2 Insights table: break-even reuse count N*, storage-cost fraction,
+and the simplified-ratio approximation quality — extended beyond the paper
+across the assigned architectures, storage tiers and int8 compression."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import get_config
+from repro.core.cost_model import (
+    Workload, break_even_reuses, cost_kv, cost_ratio, simplified_ratio,
+)
+from repro.core.perf_model import PerfModel, V100_X4_HF, tpu_v5e
+from repro.core.pricing import AWS_PAPER, tpu_v5e_pod
+
+ARCHS = (
+    "llama-7b", "granite-34b", "mistral-nemo-12b", "qwen2-1.5b",
+    "mixtral-8x22b", "olmoe-1b-7b", "jamba-1.5-large-398b", "mamba2-1.3b",
+)
+
+
+def table(L_context: int = 10_000) -> List[dict]:
+    w = Workload(L_context=L_context, L_prompt=32, L_output=32, N=5)
+    pm_paper = PerfModel(V100_X4_HF)
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for tier_name in ("io2", "gp3", "s3"):
+            for comp in (1.0, 0.5):
+                tier = AWS_PAPER.tier(tier_name)
+                n_star = break_even_reuses(
+                    cfg, w, AWS_PAPER, pm_paper, tier=tier, compression=comp
+                )
+                ck = cost_kv(cfg, w, AWS_PAPER, pm_paper, tier=tier, compression=comp)
+                rows.append(
+                    {
+                        "arch": arch,
+                        "tier": tier_name,
+                        "compression": comp,
+                        "break_even_N": n_star,
+                        "ratio_N5": cost_ratio(
+                            cfg, w, AWS_PAPER, pm_paper, tier=tier, compression=comp
+                        ),
+                        "simplified_N5": simplified_ratio(cfg, w, pm_paper),
+                        "storage_fraction": ck.storage / ck.total,
+                    }
+                )
+    return rows
+
+
+def run() -> List[str]:
+    out = []
+    for r in table():
+        if r["tier"] == "io2" and r["compression"] == 1.0:
+            out.append(
+                f"breakeven/{r['arch']},{r['ratio_N5']*100:.0f},"
+                f"N*={r['break_even_N']};storage_frac={r['storage_fraction']:.4f}"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    for r in table():
+        print(
+            f"{r['arch']:22s} {r['tier']:4s} comp={r['compression']:.1f} "
+            f"N*={str(r['break_even_N']):>5s} ratio@N5={r['ratio_N5']:.2f}x "
+            f"(simplified {r['simplified_N5']:.2f}x) storage%={100*r['storage_fraction']:.2f}"
+        )

@@ -1,0 +1,63 @@
+"""Microbenchmarks: wall-time of the real jitted hot paths on this host
+(reduced configs — CPU numbers are for regression tracking, not TPU claims)
++ kernel interpret-mode correctness timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> List[str]:
+    from repro.configs import get_config, reduced_config
+    from repro.models import registry
+
+    out = []
+    rng = np.random.default_rng(0)
+    for arch in ("llama-7b", "mixtral-8x22b", "mamba2-1.3b"):
+        cfg = reduced_config(get_config(arch))
+        api = registry.get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        B, S = 2, 64
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+        fwd = jax.jit(lambda p, t: api.forward(p, cfg, t)[0])
+        out.append(f"micro/forward/{arch},{_time(fwd, params, toks):.1f},B{B}xS{S}")
+
+        state = api.init_state(cfg, B, 128)
+        pre = jax.jit(lambda p, t, s: api.prefill(p, cfg, t, s))
+        logits, state = pre(params, toks, state)
+        out.append(f"micro/prefill/{arch},{_time(pre, params, toks, state):.1f},B{B}xS{S}")
+
+        one = jnp.asarray(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32)
+        dec = jax.jit(lambda p, t, s: api.decode(p, cfg, t, s))
+        logits, state2 = dec(params, one, state)
+        out.append(f"micro/decode/{arch},{_time(dec, params, one, state):.1f},B{B}")
+
+    # storage-path ops
+    from repro.kernels import ops
+
+    x = jnp.asarray(rng.standard_normal((64, 256, 16)), jnp.float32)
+    q, s = ops.kv_quant(x)
+    out.append(f"micro/kv_quant,{_time(jax.jit(ops.kv_quant), x):.1f},{x.size}elts")
+    deq = jax.jit(lambda q, s: ops.kv_dequant(q, s, dtype=jnp.float32))
+    out.append(f"micro/kv_dequant,{_time(deq, q, s):.1f},{x.size}elts")
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

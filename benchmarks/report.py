@@ -1,0 +1,160 @@
+"""Render EXPERIMENTS.md tables from the dry-run/calibration artifacts.
+
+Replaces ``<!-- TABLE:name -->`` markers in EXPERIMENTS.md (in place) with
+generated markdown.  Idempotent: tables live between marker pairs.
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+from benchmarks import roofline as rl
+
+ROOT = Path(__file__).resolve().parents[1]
+ART = ROOT / "artifacts" / "dryrun"
+
+
+def _fmt(x, digits=3):
+    return f"{x:.{digits}e}" if isinstance(x, float) else str(x)
+
+
+def load_cells(tag: str = "", mesh: str = "pod16x16"):
+    devices = 512 if mesh == "pod2x16x16" else 256
+    suffix = f"__{tag}" if tag else ""
+    out = {}
+    for f in sorted(ART.glob(f"*__{mesh}{suffix}.json")):
+        if "__calib" in f.name:
+            continue
+        rec = json.loads(f.read_text())
+        if tag == "" and re.search(r"__(v\d+)\.json$", f.name):
+            continue
+        # calibration lookup must match the tag
+        rec["mesh_tagged"] = f"{mesh}{suffix}"
+        cell = analyze(rec, devices, tag)
+        if cell:
+            out[(rec["arch"], rec["shape"])] = cell
+    return out
+
+
+def analyze(rec, devices, tag):
+    if not rec.get("ok"):
+        return None
+    calib_name = (
+        f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        + (f"__{tag}" if tag else "")
+        + "__calib.json"
+    )
+    calib = ART / calib_name
+    corr = {"flops": rec["flops"], "bytes": rec["bytes_accessed"],
+            "coll": rec["collectives"]["total"], "calibrated": False}
+    if calib.exists():
+        c = json.loads(calib.read_text())
+        d1, d2 = c.get("d1", {}), c.get("d2", {})
+        if d1 and d2 and "error" not in d1 and "error" not in d2:
+            D = c["periods_full"]
+            for key, k1 in (("flops", "flops"), ("bytes", "bytes_accessed"),
+                            ("coll", "collective_total")):
+                corr[key] = d1[k1] + (D - 1) * max(d2[k1] - d1[k1], 0.0)
+            corr["calibrated"] = True
+    terms = {
+        "compute": corr["flops"] / rl.PEAK_FLOPS,
+        "memory": corr["bytes"] / rl.HBM_BW,
+        "collective": corr["coll"] / rl.LINK_BW,
+    }
+    mf = rl.model_flops(rec["arch"], rec["shape"])
+    ideal = mf / devices / rl.PEAK_FLOPS
+    dom = max(terms.values())
+    return {
+        **{f"{k}_s": v for k, v in terms.items()},
+        "bottleneck": max(terms, key=terms.get),
+        "useful_ratio": mf / max(corr["flops"] * devices, 1e-30),
+        "frac": ideal / max(dom, 1e-30),
+        "calibrated": corr["calibrated"],
+        "compile_s": rec.get("compile_s"),
+        "kind": rec["kind"],
+    }
+
+
+def table_roofline(tag: str) -> str:
+    cells = load_cells(tag)
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "useful FLOP ratio | roofline frac | calib |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), c in sorted(cells.items()):
+        rows.append(
+            f"| {arch} | {shape} | {c['compute_s']:.3e} | {c['memory_s']:.3e} | "
+            f"{c['collective_s']:.3e} | {c['bottleneck']} | {c['useful_ratio']:.2f} | "
+            f"{c['frac']:.3f} | {'y' if c['calibrated'] else 'n'} |"
+        )
+    return "\n".join(rows)
+
+
+def table_compare() -> str:
+    base = load_cells("")
+    opt = load_cells("v3")
+    rows = [
+        "| arch | shape | dominant term | baseline s | optimized s | x better | "
+        "frac before | frac after |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(set(base) & set(opt)):
+        b, o = base[key], opt[key]
+        bd = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        od = max(o["compute_s"], o["memory_s"], o["collective_s"])
+        rows.append(
+            f"| {key[0]} | {key[1]} | {b['bottleneck']}->{o['bottleneck']} | "
+            f"{bd:.3e} | {od:.3e} | {bd/max(od,1e-30):.2f} | "
+            f"{b['frac']:.3f} | {o['frac']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def table_dryrun_summary() -> str:
+    rows = [
+        "| mesh | compiled OK | failed | documented skips |",
+        "|---|---|---|---|",
+    ]
+    for mesh in ("pod16x16", "pod2x16x16"):
+        ok = fail = skip = 0
+        for f in sorted(ART.glob(f"*__{mesh}.json")):
+            if "__calib" in f.name or re.search(r"__v\d+\.json$", f.name):
+                continue
+            r = json.loads(f.read_text())
+            if not r.get("runnable", True):
+                skip += 1
+            elif r.get("ok"):
+                ok += 1
+            else:
+                fail += 1
+        rows.append(f"| {mesh} | {ok} | {fail} | {skip} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    md = ROOT / "EXPERIMENTS.md"
+    text = md.read_text()
+    tables = {
+        "dryrun_summary": table_dryrun_summary(),
+        "roofline_baseline": table_roofline(""),
+        "roofline_optimized": table_roofline("v3"),
+        "compare": table_compare(),
+    }
+    for name, content in tables.items():
+        begin, end = f"<!-- TABLE:{name} -->", f"<!-- /TABLE:{name} -->"
+        pat = re.compile(re.escape(begin) + r".*?" + re.escape(end), re.S)
+        repl = f"{begin}\n{content}\n{end}"
+        if pat.search(text):
+            text = pat.sub(repl, text)
+        else:
+            print(f"marker {name} missing in EXPERIMENTS.md")
+    md.write_text(text)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

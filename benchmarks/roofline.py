@@ -1,0 +1,191 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+compiled artifact (all quantities are PER DEVICE post-SPMD — verified against
+a known 1024^3 matmul probe):
+
+  compute_term    = HLO_FLOPs_dev / (peak_FLOP/s)
+  memory_term     = HLO_bytes_dev / HBM_bw
+  collective_term = collective_bytes_dev / link_bw
+
+Hardware constants (assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI per chip.
+
+Also reports MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs_total — catching
+remat/redundancy waste — plus the roofline fraction
+  frac = ideal_compute_term / dominant_term
+(1.0 = the program is pure useful compute at peak).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Ideal model FLOPs for the whole step (all devices)."""
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    from repro.models.registry import count_active_params
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = count_active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * (
+            cfg.decoder_seq_len if cfg.family == "encdec" else shape.seq_len
+        )
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * (
+            shape.seq_len if cfg.family != "encdec" else shape.seq_len + cfg.decoder_seq_len
+        )
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def load_calibration(arch: str, shape: str, mesh: str) -> Optional[dict]:
+    f = ARTIFACT_DIR / f"{arch}__{shape}__{mesh}__calib.json"
+    if not f.exists():
+        return None
+    c = json.loads(f.read_text())
+    d1, d2 = c.get("d1", {}), c.get("d2", {})
+    if "error" in d1 or "error" in d2 or not d1 or not d2:
+        return None
+    return c
+
+
+def corrected(rec: dict) -> dict:
+    """Depth-corrected per-device numbers.
+
+    XLA cost_analysis counts a while-loop (scan-over-layers) body once; the
+    calibration compiles UNROLLED 1- and 2-period variants so
+      f(D) = f(1) + (D-1) * (f(2) - f(1))
+    is exact for every linear-in-depth quantity (flops, bytes, collective
+    bytes).  Falls back to the raw numbers when no calibration exists."""
+    c = load_calibration(rec["arch"], rec["shape"], rec["mesh"])
+    out = {
+        "flops": rec["flops"],
+        "bytes": rec["bytes_accessed"],
+        "coll": rec["collectives"]["total"],
+        "calibrated": False,
+    }
+    if c is None:
+        return out
+    D = c["periods_full"]
+    for key, (k1, raw) in {
+        "flops": ("flops", "flops"),
+        "bytes": ("bytes_accessed", "bytes"),
+        "coll": ("collective_total", "coll"),
+    }.items():
+        f1, f2 = c["d1"][k1], c["d2"][k1]
+        out[key] = f1 + (D - 1) * max(f2 - f1, 0.0)
+    out["calibrated"] = True
+    return out
+
+
+def analyze_cell(rec: dict, devices: int) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    corr = corrected(rec)
+    flops_dev = corr["flops"]
+    bytes_dev = corr["bytes"]
+    coll_dev = corr["coll"]
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_t = bytes_dev / HBM_BW
+    coll_t = coll_dev / LINK_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    ideal_t = mf / devices / PEAK_FLOPS
+    dominant = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops_total": flops_dev * devices,
+        "useful_ratio": mf / max(flops_dev * devices, 1e-30),
+        "roofline_fraction": ideal_t / max(dominant, 1e-30),
+        "calibrated": corr["calibrated"],
+        "collective_mix": {
+            k: v for k, v in rec["collectives"].items() if k != "total" and v
+        },
+    }
+
+
+def load_all(mesh: str = "pod16x16") -> List[dict]:
+    devices = 512 if mesh == "pod2x16x16" else 256
+    out = []
+    for f in sorted(ARTIFACT_DIR.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        cell = analyze_cell(rec, devices)
+        if cell:
+            out.append(cell)
+    return out
+
+
+def markdown_table(cells: List[dict]) -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "useful FLOP ratio | roofline frac |\n|---|---|---|---|---|---|---|---|"
+    )
+    rows = [hdr]
+    for c in cells:
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']:.3e} | "
+            f"{c['memory_s']:.3e} | {c['collective_s']:.3e} | {c['bottleneck']} | "
+            f"{c['useful_ratio']:.2f} | {c['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def run() -> List[str]:
+    """CSV lines for benchmarks.run (derived = roofline fraction); reports
+    the paper-faithful baseline and, where present, the beyond-paper v3
+    variant (see EXPERIMENTS.md §Perf)."""
+    lines = []
+    for c in load_all("pod16x16"):
+        us = max(c["compute_s"], c["memory_s"], c["collective_s"]) * 1e6
+        lines.append(
+            f"roofline/{c['arch']}/{c['shape']},{us:.2f},"
+            f"frac={c['roofline_fraction']:.3f};bottleneck={c['bottleneck']}"
+        )
+    try:
+        from benchmarks import report
+
+        for (arch, shape), c in sorted(report.load_cells("v3").items()):
+            us = max(c["compute_s"], c["memory_s"], c["collective_s"]) * 1e6
+            lines.append(
+                f"roofline-v3/{arch}/{shape},{us:.2f},"
+                f"frac={c['frac']:.3f};bottleneck={c['bottleneck']}"
+            )
+    except Exception:  # artifacts absent: baseline-only
+        pass
+    return lines
+
+
+if __name__ == "__main__":
+    cells = load_all("pod16x16")
+    print(markdown_table(cells))
+    worst = sorted(cells, key=lambda c: c["roofline_fraction"])[:5]
+    print("\nworst roofline fractions:")
+    for c in worst:
+        print(f"  {c['arch']} {c['shape']}: {c['roofline_fraction']:.3f} ({c['bottleneck']})")
+    coll = sorted(cells, key=lambda c: -c["collective_s"])[:5]
+    print("most collective-bound:")
+    for c in coll:
+        print(f"  {c['arch']} {c['shape']}: coll={c['collective_s']:.3e}s")

@@ -1,0 +1,42 @@
+"""Benchmark runner — one module per paper table/figure + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement):
+  * fig2a     — paper Fig 2(a): savings vs input length   (simulator)
+  * fig2b     — paper Fig 2(b): savings vs output length  (simulator)
+  * breakeven — paper §2 insights: N*, storage fraction   (analytic model)
+  * roofline  — per (arch x shape) terms from the dry-run artifacts
+  * micro     — wall-time of the real jitted hot paths (reduced configs)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import ablation, breakeven, fig2a, fig2b, microbench, roofline
+
+    modules = [
+        ("fig2a", fig2a),
+        ("fig2b", fig2b),
+        ("breakeven", breakeven),
+        ("roofline", roofline),
+        ("micro", microbench),
+        ("ablation", ablation),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for line in mod.run():
+                print(line)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Cost explorer: the paper's analytical model as a planning tool.
+
+Sweeps workload parameters (context length, reuse count, output length)
+across architectures / storage tiers / compression and prints when KV reuse
+wins, by how much, and what drives the bill — the developer-facing artifact
+the paper argues for ("an analytical model for developers to compare service
+costs given their workload pattern and cloud pricing policy").
+
+    PYTHONPATH=src python examples/cost_explorer.py --arch mistral-nemo-12b
+"""
+import argparse
+
+from repro.configs import get_config, list_configs
+from repro.core.cost_model import (
+    Workload, break_even_reuses, cost_kv, cost_text, delay_kv, delay_text,
+)
+from repro.core.perf_model import PerfModel, V100_X4_HF, tpu_v5e
+from repro.core.pricing import AWS_PAPER, tpu_v5e_pod
+
+
+def explore(arch: str, platform: str):
+    cfg = get_config(arch)
+    if platform == "tpu":
+        pm, pricing = PerfModel(tpu_v5e(8, hosts=1)), tpu_v5e_pod(8)
+    else:
+        pm, pricing = PerfModel(V100_X4_HF), AWS_PAPER
+
+    print(f"=== {arch} on {pm.hw.name} ===")
+    print(f"{'L_ctx':>8s} {'N':>4s} {'L_out':>6s} | {'C_text':>9s} {'C_KV':>9s} "
+          f"{'ratio':>6s} | {'TTFT_text':>9s} {'TTFT_KV':>8s} | {'N*':>4s}")
+    for L_ctx in (2_000, 10_000, 32_000, 100_000):
+        if cfg.family not in ("ssm", "hybrid") and not cfg.sliding_window:
+            if L_ctx > cfg.max_seq_len:
+                continue
+        for N in (2, 10, 100):
+            for L_out in (16, 128):
+                w = Workload(L_context=L_ctx, L_prompt=32, L_output=L_out, N=N)
+                ct = cost_text(cfg, w, pricing, pm).total
+                ck = cost_kv(cfg, w, pricing, pm).total
+                dt = delay_text(cfg, w, pm).ttft_s
+                dk = delay_kv(cfg, w, pm, tier=pricing.tier()).ttft_s
+                ns = break_even_reuses(cfg, w, pricing, pm)
+                print(f"{L_ctx:8d} {N:4d} {L_out:6d} | {ct:9.4f} {ck:9.4f} "
+                      f"{ct/ck:6.2f} | {dt:9.3f} {dk:8.3f} | {str(ns):>4s}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-7b", choices=list_configs())
+    ap.add_argument("--platform", default="paper", choices=["paper", "tpu"])
+    ap.add_argument("--all", action="store_true", help="sweep every assigned arch")
+    args = ap.parse_args()
+    archs = list_configs(assigned_only=True) if args.all else [args.arch]
+    for a in archs:
+        explore(a, args.platform)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro: TPU-native LLM serving/training framework with stored-KV-cache reuse.
+
+Reproduction of "Towards More Economical Context-Augmented LLM Generation by
+Reusing Stored KV Cache" (Li et al., UChicago, 2025) — see DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,94 @@
+"""Config registry: the 10 assigned architectures + the paper's Llama-7B."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.configs.base import SHAPES, ArchConfig, MoEConfig, SSMConfig, ShapeSpec, cell_is_runnable
+from repro.configs import (
+    granite_34b,
+    internvl2_1b,
+    jamba_1_5_large_398b,
+    llama_7b,
+    mamba2_1_3b,
+    mistral_nemo_12b,
+    mixtral_8x22b,
+    olmoe_1b_7b,
+    qwen2_0_5b,
+    qwen2_1_5b,
+    whisper_tiny,
+)
+
+# The 10 assigned architectures (dry-run/roofline matrix rows).
+ASSIGNED: Dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        granite_34b,
+        mistral_nemo_12b,
+        qwen2_1_5b,
+        qwen2_0_5b,
+        whisper_tiny,
+        internvl2_1b,
+        jamba_1_5_large_398b,
+        olmoe_1b_7b,
+        mixtral_8x22b,
+        mamba2_1_3b,
+    )
+}
+
+# Extra configs (not part of the assigned matrix): the paper's own model.
+EXTRA: Dict[str, ArchConfig] = {llama_7b.CONFIG.name: llama_7b.CONFIG}
+
+CONFIGS: Dict[str, ArchConfig] = {**ASSIGNED, **EXTRA}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(CONFIGS)}")
+    return CONFIGS[name]
+
+
+def list_configs(assigned_only: bool = False) -> List[str]:
+    return sorted(ASSIGNED if assigned_only else CONFIGS)
+
+
+def reduced_config(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """A small same-family config for CPU smoke tests (spec: 'small layers /
+    width, few experts, tiny embedding tables').  Keeps every structural
+    feature (GQA ratios, MoE, SSD, hybrid period, biases) while shrinking
+    dimensions."""
+    small = dict(
+        n_layers=len(cfg.hybrid_period) if cfg.hybrid_period else 2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab=512,
+        head_dim=16,
+        max_seq_len=256,
+        param_partition="dp",
+        remat="none",
+        param_dtype="float32",
+        dtype="float32",
+    )
+    if cfg.moe is not None:
+        # capacity_factor >= n_experts/top_k guarantees zero token drops, so
+        # reuse-vs-recompute equality checks are exact in smoke tests.
+        small["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=min(cfg.moe.top_k, 2), capacity_factor=4.0
+        )
+    if cfg.ssm is not None:
+        small["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=16, chunk=16
+        )
+    if cfg.family == "encdec":
+        small["n_encoder_layers"] = 2
+        small["encoder_seq_len"] = 32
+        small["decoder_seq_len"] = 64
+    if cfg.frontend_tokens:
+        small["frontend_tokens"] = 8
+    if cfg.sliding_window:
+        small["sliding_window"] = 16
+    small["name"] = cfg.name + "-smoke"
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

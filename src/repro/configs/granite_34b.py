@@ -1,0 +1,28 @@
+"""granite-34b — IBM Granite Code 34B [arXiv:2405.04324; hf].
+
+Llama-style attention stack with MQA (a single KV head) => the stored-KV
+footprint per token is 48x smaller than MHA, which drops the paper's
+break-even reuse frequency dramatically (DESIGN.md §6).
+
+The 34B Granite Code model is GPTBigCode-derived: its MLP is the 2-matrix
+GELU form (a SwiGLU d_ff=24576 MLP would give ~47B params, not 34B — we
+checked via eval_shape; with GELU the implemented model is 33.6B ≈ 34B).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-34b",
+    family="dense",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,  # MQA
+    d_ff=24576,
+    vocab=49152,
+    head_dim=128,
+    rope_theta=10_000.0,
+    mlp_type="gelu",
+    tie_embeddings=False,
+    param_partition="fsdp",
+    remat="dots",
+)

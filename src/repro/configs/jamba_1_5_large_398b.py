@@ -1,0 +1,31 @@
+"""jamba-1.5-large-398b — AI21 Jamba-1.5-Large [arXiv:2403.19887; hf].
+
+Hybrid Mamba+attention at a 1:7 attn:mamba interleave (one attention layer
+per 8-layer period), MoE (16 experts, top-2) on every other layer, no
+positional embedding (the Mamba layers carry position).  Jamba's Mamba-1
+layers are implemented in the SSD (Mamba-2) formulation — same O(1) state
+semantics, TPU-friendlier chunked-matmul form (DESIGN.md §3).
+
+Stored context state = 9 attention layers' KV + per-Mamba-layer (conv, SSD)
+state => the paper's S_storage gains an L-independent term (DESIGN.md §6).
+"""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,  # 9 periods x 8 layers
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab=65536,
+    head_dim=128,
+    rope_theta=None,  # Jamba uses no positional embedding
+    moe=MoEConfig(n_experts=16, top_k=2, every=2, offset=1),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=128, n_groups=1, chunk=256),
+    hybrid_period=("m", "m", "m", "m", "a", "m", "m", "m"),
+    max_seq_len=262_144,
+    param_partition="fsdp",
+    remat="dots",
+)

@@ -1,0 +1,27 @@
+"""mixtral-8x22b — Mixtral-8x22B [arXiv:2401.04088; hf].
+
+8 experts top-2; sliding-window attention per the assignment (window 4096,
+the Mistral-lineage default) => decode KV is bounded by the window, so the
+``long_500k`` cell runs with a ring-buffer cache of 4096 slots and the
+stored-context KV for the paper's technique is min(L, 4096) per layer
+(DESIGN.md §6).
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,  # per-expert FFN width
+    vocab=32768,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    sliding_window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2),
+    max_seq_len=65_536,
+    param_partition="fsdp",
+    remat="dots",
+)

@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns a :class:`CellSpec` describing which step
+function the cell lowers (train_step / prefill_step / decode_step) and the
+shape-only batch kwargs — the shannon/kernels pattern: weak-type-correct,
+shardable, no device allocation (model state specs come from
+``jax.eval_shape`` over ``init_state``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec, cell_is_runnable
+from repro.models import registry
+from repro.models.common import resolve_dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str  # "train" | "prefill" | "decode"
+    batch: Dict[str, Any]  # kwargs of ShapeDtypeStructs (excl. params)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _state_spec(cfg: ArchConfig, batch: int, max_len: int, enc_len=None):
+    api = registry.get_model(cfg)
+    if cfg.family == "encdec":
+        fn = lambda: api.init_state(cfg, batch, max_len, enc_len=enc_len)
+    else:
+        fn = lambda: api.init_state(cfg, batch, max_len)
+    return jax.eval_shape(fn)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> CellSpec:
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell {cfg.name} x {shape.name} is skipped: {why}")
+
+    gb, S = shape.global_batch, shape.seq_len
+    act = resolve_dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            dl = cfg.decoder_seq_len
+            batch = {
+                "frames": _sds((gb, S, cfg.d_model), act),
+                "dec_tokens": _sds((gb, dl), i32),
+                "labels": _sds((gb, dl), i32),
+                "mask": _sds((gb, dl), jnp.float32),
+            }
+        elif cfg.family == "vlm":
+            ft = cfg.frontend_tokens
+            batch = {
+                "tokens": _sds((gb, S - ft), i32),
+                "embeds": _sds((gb, ft, cfg.d_model), act),
+                "labels": _sds((gb, S), i32),
+                "mask": _sds((gb, S), jnp.float32),
+            }
+        else:
+            batch = {
+                "tokens": _sds((gb, S), i32),
+                "labels": _sds((gb, S), i32),
+                "mask": _sds((gb, S), jnp.float32),
+            }
+        return CellSpec(cfg.name, shape.name, "train", batch)
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            # Context = S audio frames (encoded now, cross-KV written to the
+            # state); prefill the full decoder prompt window.
+            dl = cfg.decoder_seq_len
+            batch = {
+                "tokens": _sds((gb, dl), i32),
+                "embeds": _sds((gb, S, cfg.d_model), act),
+                "state": _state_spec(cfg, gb, dl, enc_len=S),
+            }
+        elif cfg.family == "vlm":
+            ft = cfg.frontend_tokens
+            batch = {
+                "tokens": _sds((gb, S - ft), i32),
+                "embeds": _sds((gb, ft, cfg.d_model), act),
+                "state": _state_spec(cfg, gb, S),
+            }
+        else:
+            batch = {
+                "tokens": _sds((gb, S), i32),
+                "state": _state_spec(cfg, gb, S),
+            }
+        return CellSpec(cfg.name, shape.name, "prefill", batch)
+
+    # decode: one new token against a cache of S context tokens.
+    if cfg.family == "encdec":
+        state = _state_spec(cfg, gb, S, enc_len=cfg.encoder_seq_len)
+    else:
+        state = _state_spec(cfg, gb, S)
+    batch = {"tokens": _sds((gb, 1), i32), "state": state}
+    return CellSpec(cfg.name, shape.name, "decode", batch)

@@ -1,0 +1,29 @@
+"""whisper-tiny — [arXiv:2212.04356; unverified tier].
+
+Encoder-decoder; the conv mel frontend is a STUB per the assignment —
+``input_specs()`` provides precomputed frame embeddings.  LayerNorm + GELU,
+sinusoidal encoder positions, learned decoder positions, tied embeddings.
+Reusable context state = encoder output + decoder cross-attn KV (DESIGN.md §6).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,  # decoder depth
+    n_encoder_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    rope_theta=None,
+    norm_type="layernorm",
+    mlp_type="gelu",
+    abs_pos_embed=True,
+    tie_embeddings=True,
+    frontend="audio",
+    encoder_seq_len=1500,
+    decoder_seq_len=448,
+    param_partition="dp",
+)

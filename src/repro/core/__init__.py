@@ -1,0 +1,3 @@
+"""The paper's contribution: cost/delay analytical model for KV-cache reuse,
+its validation simulator, and the serving-time reuse policy built on it."""
+from repro.core import cost_model, perf_model, policy, pricing, simulator  # noqa: F401

@@ -1,0 +1,197 @@
+"""Analytical performance model: T_prefill / T_decode / KV-load times.
+
+The paper treats T_prefill(L) and T_decode(L) as measured black boxes; to make
+the cost model predictive for arbitrary (arch, hardware) pairs we derive them
+from a two-term roofline:
+
+  t = max( FLOPs / (devices * peak_flops * mfu),
+           bytes  / (devices * hbm_bw   * membw_eff) )
+
+Calibration: with ``V100x4`` and Llama-7B this reproduces the paper's own
+measured T_prefill(10K) ~= 0.7 s (tests/test_cost_model.py asserts it within
+tolerance), so the analytic and the paper's empirical numbers agree before we
+extrapolate beyond the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.pricing import GB, StorageTier
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    devices: int
+    peak_flops: float  # per device, FLOP/s at serving dtype
+    hbm_bw: float  # per device, bytes/s
+    hbm_bytes: float  # per device
+    link_bw: float  # per-device interconnect, bytes/s (ICI/NVLink)
+    host_read_bw: float = 32 * GB  # PCIe to one host
+    hosts: int = 1  # hosts the instance spans (parallel storage mounts)
+    mfu: float = 0.40  # achievable fraction of peak in prefill/training
+    membw_eff: float = 0.70  # achievable fraction of HBM bandwidth in decode
+
+
+V100_X4 = HardwareSpec(
+    name="V100x4",
+    devices=4,
+    peak_flops=125e12,  # fp16 tensor core peak
+    hbm_bw=900e9,
+    hbm_bytes=16 * GB,
+    link_bw=150e9,  # NVLink
+    hosts=1,
+    mfu=0.40,
+    membw_eff=0.70,
+)
+
+# The paper's measured pipeline: Llama-7B under HuggingFace *naive* model
+# parallelism on a p3.8xlarge — layers are spread across the 4 GPUs and run
+# sequentially, so throughput ~= one V100 at low utilisation while the whole
+# instance is billed.  mfu=0.18 calibrates T_prefill(10K) to the ~7 s implied
+# by the paper's footnote 2 ($3/h / 3600 * T = $0.0058 => T ~= 7 s); the
+# effective per-instance mfu is 0.18/4 because only one of the 4 billed GPUs
+# computes at a time.
+V100_X1_PAPER = HardwareSpec(
+    name="V100x1-HF",
+    devices=1,
+    peak_flops=125e12,
+    hbm_bw=900e9,
+    hbm_bytes=16 * GB,
+    link_bw=150e9,
+    hosts=1,
+    mfu=0.18,
+    membw_eff=0.45,
+)
+V100_X4_HF = HardwareSpec(
+    name="V100x4-HF-MP",
+    devices=4,
+    peak_flops=125e12,
+    hbm_bw=900e9,
+    hbm_bytes=16 * GB,
+    link_bw=150e9,
+    hosts=1,
+    mfu=0.18 / 4,  # sequential layer placement: 1-of-4 GPUs active
+    membw_eff=0.45 / 4,
+)
+
+# TPU v5e per the assignment's hardware constants:
+# 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI, 16 GB HBM.
+def tpu_v5e(chips: int, hosts: Optional[int] = None) -> HardwareSpec:
+    return HardwareSpec(
+        name=f"TPUv5e-{chips}",
+        devices=chips,
+        peak_flops=197e12,
+        hbm_bw=819e9,
+        hbm_bytes=16 * GB,
+        link_bw=50e9,
+        hosts=hosts if hosts is not None else max(1, chips // 8),
+        mfu=0.50,
+        membw_eff=0.75,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfModel:
+    hw: HardwareSpec
+
+    # ----------------------------------------------------------------- #
+    # FLOP / byte accounting
+    # ----------------------------------------------------------------- #
+    def prefill_flops(self, cfg: ArchConfig, L: int) -> float:
+        """2*N_active*L matmul FLOPs + quadratic attention score/value FLOPs
+        (windowed for SWA archs)."""
+        from repro.models.registry import count_active_params
+
+        n_active = count_active_params(cfg)
+        flops = 2.0 * n_active * L
+        # attention: 2 * (QK^T + PV) = 4 * H * hd * L * L_att per layer
+        if cfg.n_attn_layers:
+            l_att = min(L, cfg.sliding_window) if cfg.sliding_window else L
+            flops += 4.0 * cfg.n_attn_layers * cfg.n_heads * cfg.resolved_head_dim * L * (
+                l_att / 2.0 if l_att == L else l_att
+            )
+        return flops
+
+    def decode_flops_per_token(self, cfg: ArchConfig, context_len: int) -> float:
+        from repro.models.registry import count_active_params
+
+        flops = 2.0 * count_active_params(cfg)
+        if cfg.n_attn_layers:
+            l_att = (
+                min(context_len, cfg.sliding_window)
+                if cfg.sliding_window
+                else context_len
+            )
+            flops += 4.0 * cfg.n_attn_layers * cfg.n_heads * cfg.resolved_head_dim * l_att
+        return flops
+
+    def decode_bytes_per_token(
+        self, cfg: ArchConfig, context_len: int, dtype_bytes: int = 2
+    ) -> float:
+        """HBM traffic per decoded token: all active params + the KV cache."""
+        from repro.models.registry import count_active_params
+
+        param_bytes = count_active_params(cfg) * dtype_bytes
+        l_att = (
+            min(context_len, cfg.sliding_window) if cfg.sliding_window else context_len
+        )
+        kv = cfg.kv_bytes_per_token(dtype_bytes) * l_att + cfg.fixed_state_bytes(dtype_bytes)
+        return param_bytes + kv
+
+    # ----------------------------------------------------------------- #
+    # Times (seconds) — the paper's T_prefill / T_decode
+    # ----------------------------------------------------------------- #
+    def t_prefill(self, cfg: ArchConfig, L: int, batch: int = 1) -> float:
+        if L <= 0:
+            return 0.0
+        hw = self.hw
+        flops = self.prefill_flops(cfg, L) * batch
+        comp = flops / (hw.devices * hw.peak_flops * hw.mfu)
+        from repro.models.registry import count_active_params
+
+        bytes_ = count_active_params(cfg) * 2 + cfg.kv_bytes_per_token(2) * L * batch
+        mem = bytes_ / (hw.devices * hw.hbm_bw * hw.membw_eff)
+        return max(comp, mem)
+
+    def t_decode(
+        self, cfg: ArchConfig, L_out: int, context_len: int, batch: int = 1
+    ) -> float:
+        """Total time to emit ``L_out`` tokens (sequential steps; ``batch``
+        sequences decoded together amortise the parameter reads)."""
+        if L_out <= 0:
+            return 0.0
+        hw = self.hw
+        # per step: params read once for the whole batch, KV per sequence
+        from repro.models.registry import count_active_params
+
+        param_bytes = count_active_params(cfg) * 2
+        l_att = (
+            min(context_len, cfg.sliding_window) if cfg.sliding_window else context_len
+        )
+        kv_bytes = (
+            cfg.kv_bytes_per_token(2) * l_att + cfg.fixed_state_bytes(2)
+        ) * batch
+        mem = (param_bytes + kv_bytes) / (hw.devices * hw.hbm_bw * hw.membw_eff)
+        comp = (
+            self.decode_flops_per_token(cfg, context_len)
+            * batch
+            / (hw.devices * hw.peak_flops * hw.mfu)
+        )
+        return L_out * max(comp, mem)
+
+    # ----------------------------------------------------------------- #
+    # KV movement (the paper's transmission delay)
+    # ----------------------------------------------------------------- #
+    def kv_load_time(self, nbytes: float, tier: StorageTier) -> float:
+        """Storage -> host -> device, per-host-parallel mounts (DESIGN.md §3)."""
+        storage = nbytes / (tier.read_bw_gbps * GB * self.hw.hosts)
+        pcie = nbytes / (self.hw.host_read_bw * self.hw.hosts)
+        return tier.latency_s + storage + pcie
+
+    def kv_store_time(self, nbytes: float, tier: StorageTier) -> float:
+        storage = nbytes / (tier.write_bw_gbps * GB * self.hw.hosts)
+        pcie = nbytes / (self.hw.host_read_bw * self.hw.hosts)
+        return tier.latency_s + storage + pcie

@@ -1,0 +1,123 @@
+"""Cloud pricing catalogs (the paper's cost-model inputs).
+
+Two catalogs ship by default:
+  * ``AWS_PAPER``   — the paper's own setting: V100 GPUs at $3/h (p3 family),
+    EBS io2 at $0.125/GB-month with 4 GB/s provisioned throughput [paper §2].
+  * ``TPU_V5E``     — the target platform for this framework: v5e chips with
+    per-host remote storage (io2-equivalent pricing) — used by the serving
+    engine and the beyond-paper analyses.
+
+All prices are USD; times are hours unless suffixed ``_s``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+HOURS_PER_MONTH = 730.0
+# Cloud pricing uses decimal GB (the paper: a 10K-token Llama-7B context =
+# 2*32*32*128*10240*2 B = 5.24e9 B, quoted as "5.2 GB").
+GB = 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageTier:
+    """A storage service a KV cache can live in."""
+
+    name: str
+    cost_per_gb_month: float
+    read_bw_gbps: float  # sustained GB/s available to one reader
+    write_bw_gbps: float
+    latency_s: float  # first-byte latency
+    # Fee to provision extra throughput above the baseline (the paper's
+    # C_transmission knob); $/ (GB/s) / hour.  0 for locally mounted EBS at
+    # the paper's (infrequent) IO rates.
+    provisioned_bw_cost_per_gbps_hour: float = 0.0
+    per_gb_transfer_fee: float = 0.0  # e.g. S3 egress-like fees
+
+    @property
+    def cost_per_gb_hour(self) -> float:
+        return self.cost_per_gb_month / HOURS_PER_MONTH
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputePrice:
+    name: str
+    cost_per_device_hour: float
+    devices: int  # devices in the serving instance
+
+    @property
+    def cost_per_hour(self) -> float:
+        return self.cost_per_device_hour * self.devices
+
+
+@dataclasses.dataclass(frozen=True)
+class Pricing:
+    compute: ComputePrice
+    tiers: Dict[str, StorageTier]
+    default_tier: str = "io2"
+
+    def tier(self, name: Optional[str] = None) -> StorageTier:
+        return self.tiers[name or self.default_tier]
+
+
+# --------------------------------------------------------------------------- #
+# The paper's catalog (AWS, 2024 pricing as cited)
+# --------------------------------------------------------------------------- #
+IO2 = StorageTier(
+    name="io2",
+    cost_per_gb_month=0.125,  # [Amazon EBS pricing, paper ref 1]
+    read_bw_gbps=4.0,  # io2 Block Express, highest tier (paper §2)
+    write_bw_gbps=4.0,
+    latency_s=0.001,
+)
+GP3 = StorageTier(
+    name="gp3",
+    cost_per_gb_month=0.08,
+    read_bw_gbps=1.0,
+    write_bw_gbps=1.0,
+    latency_s=0.002,
+    provisioned_bw_cost_per_gbps_hour=0.040 / HOURS_PER_MONTH * 1024,  # $0.040/MBps-month
+)
+S3_STANDARD = StorageTier(
+    name="s3",
+    cost_per_gb_month=0.023,
+    read_bw_gbps=0.78,  # ~100 Gbit instance NIC shared, conservative single-stream
+    write_bw_gbps=0.78,
+    latency_s=0.05,
+    per_gb_transfer_fee=0.0,  # same-region
+)
+HOST_DRAM = StorageTier(
+    # Host memory of the serving instance itself: priced as the marginal
+    # DRAM cost share; effectively PCIe-bandwidth "storage" (beyond-paper tier).
+    name="host_dram",
+    cost_per_gb_month=2.0,
+    read_bw_gbps=32.0,  # PCIe gen4 x16 effective
+    write_bw_gbps=32.0,
+    latency_s=1e-5,
+)
+
+AWS_PAPER = Pricing(
+    compute=ComputePrice(name="V100(p3.8xlarge)", cost_per_device_hour=3.0, devices=4),
+    tiers={"io2": IO2, "gp3": GP3, "s3": S3_STANDARD, "host_dram": HOST_DRAM},
+    default_tier="io2",
+)
+
+# --------------------------------------------------------------------------- #
+# TPU v5e catalog (target platform; DESIGN.md §3)
+# --------------------------------------------------------------------------- #
+TPU_V5E = Pricing(
+    compute=ComputePrice(name="TPUv5e-8", cost_per_device_hour=1.20, devices=8),
+    tiers={"io2": IO2, "gp3": GP3, "s3": S3_STANDARD, "host_dram": HOST_DRAM},
+    default_tier="io2",
+)
+
+
+def tpu_v5e_pod(chips: int) -> Pricing:
+    return Pricing(
+        compute=ComputePrice(
+            name=f"TPUv5e-{chips}", cost_per_device_hour=1.20, devices=chips
+        ),
+        tiers=dict(AWS_PAPER.tiers),
+        default_tier="io2",
+    )

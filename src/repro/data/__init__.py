@@ -1,0 +1,1 @@
+"""Synthetic data + context-sharing serving workloads."""

@@ -1,0 +1,1 @@
+"""Mesh/sharding rules and collective helpers (DP/TP/EP/ZeRO/FSDP)."""

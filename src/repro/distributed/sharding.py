@@ -1,0 +1,231 @@
+"""Sharding rules: parameter + context-state PartitionSpecs per architecture.
+
+Mesh axes (DESIGN.md §7):
+  * ``pod``   — pure data parallel across pods (gradients cross DCI once).
+  * ``data``  — data parallel; additionally FSDP (param/optimizer sharding)
+                for ``param_partition == "fsdp"`` archs.
+  * ``model`` — tensor parallel: attention heads / FFN width / experts /
+                SSD heads / vocab.
+
+Every rule is divisibility-guarded: a dim shards only if the axis size
+divides it (e.g. MQA's single KV head replicates; qwen2's 12 Q heads don't
+split 16 ways so the head_dim shards instead).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks, lm
+from repro.models.attention import KVCache
+from repro.models.blocks import BlockCache
+from repro.models.encdec import EncDecState
+from repro.models.lm import LMState
+from repro.models.ssm import MambaState
+
+POD, DATA, MODEL = "pod", "data", "model"
+
+# Attention sharding strategy when head counts don't divide the model axis
+# (§Perf hillclimb A, EXPERIMENTS.md):
+#   "hd"        — BASELINE: fall back to sharding head_dim (partial-sum
+#                 contractions => per-layer all-reduces/resharding).
+#   "replicate" — OPTIMIZED: replicate the indivisible projection (classic
+#                 GQA TP: KV heads replicated when kv < tp; whole attention
+#                 replicated when H < tp) — removes the attention-induced
+#                 collectives at a small redundant-compute/memory cost.
+def attn_fallback() -> str:
+    return os.environ.get("REPRO_ATTN_SHARDING", "hd")
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in (POD, DATA) if a in mesh.axis_names)
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+# --------------------------------------------------------------------------- #
+# Parameter specs
+# --------------------------------------------------------------------------- #
+def param_specs(cfg: ArchConfig, params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree parallel to ``params`` (works on real arrays or
+    ShapeDtypeStructs)."""
+    m = axis_size(mesh, MODEL)
+    d = axis_size(mesh, DATA)
+    fsdp = cfg.param_partition == "fsdp"
+
+    def fs(dim: int) -> Optional[str]:
+        return DATA if (fsdp and _div(dim, d)) else None
+
+    def md(dim: int) -> Optional[str]:
+        return MODEL if _div(dim, m) else None
+
+    def leaf_spec(path, x) -> P:
+        names = [
+            k.key if hasattr(k, "key") else str(getattr(k, "idx", k)) for k in path
+        ]
+        name = names[-1] if names else ""
+        stacked = any(n in ("layers", "encoder", "decoder") for n in names)
+        shape = tuple(x.shape)
+        if stacked:
+            shape = shape[1:]  # leading scan (layer/period) dim — never sharded
+
+        def out(*spec):
+            spec = list(spec) + [None] * (len(shape) - len(spec))
+            if stacked:
+                spec = [None] + spec
+            return P(*spec)
+
+        # ---- embeddings ------------------------------------------------ #
+        # vocab-sharded only: model-axis sharding already leaves ~67 MB/dev
+        # at 65k x 8192; adding FSDP on d_model (the matmul contraction dim)
+        # costs a 17 GB logits all-reduce per step (EXPERIMENTS.md §Perf).
+        if name == "table":
+            return out(md(shape[0]), None)
+        if name == "head":
+            return out(None, md(shape[1]))
+        if name == "dec_pos":
+            return out(None, fs(shape[1]))
+        # ---- attention --------------------------------------------------#
+        replicate_odd = attn_fallback() == "replicate"
+
+        def head_fb(hd):
+            return None if replicate_odd else md(hd)
+
+        if name in ("wq",):
+            h, hd = shape[1], shape[2]
+            return out(fs(shape[0]), md(h), None if _div(h, m) else head_fb(hd))
+        if name in ("wk", "wv"):
+            kv, hd = shape[1], shape[2]
+            return out(fs(shape[0]), md(kv), None if _div(kv, m) else head_fb(hd))
+        if name == "wo":
+            h, hd = shape[0], shape[1]
+            return out(md(h), None if _div(h, m) else head_fb(hd), fs(shape[2]))
+        if name == "bq":
+            h, hd = shape
+            return out(md(h), None if _div(h, m) else head_fb(hd))
+        if name in ("bk", "bv"):
+            kv, hd = shape
+            return out(md(kv), None if _div(kv, m) else head_fb(hd))
+        # ---- MoE --------------------------------------------------------#
+        if name == "router":
+            return out(fs(shape[0]), None)
+        # Expert weights: FSDP goes on the OUTPUT dim, never the contraction
+        # dim — fsdp-on-contraction makes XLA partial-sum every expert matmul
+        # into a 32 GB f32 all-reduce over the data axis (jamba train_4k;
+        # EXPERIMENTS.md §Perf hillclimb C).
+        if name in ("w_gate", "w_up") and len(shape) == 3:  # [E, D, F]
+            e = shape[0]
+            return out(md(e), None, fs(shape[2]) if _div(e, m) else md(shape[2]))
+        if name == "w_down" and len(shape) == 3:  # [E, F, D]
+            e = shape[0]
+            return out(md(e), None if _div(e, m) else md(shape[1]), fs(shape[2]))
+        # ---- dense MLP ---------------------------------------------------#
+        if name in ("w_gate", "w_up", "w1"):
+            return out(fs(shape[0]), md(shape[1]))
+        if name in ("w_down", "w2"):
+            return out(md(shape[0]), fs(shape[1]))
+        if name == "b1":
+            return out(md(shape[0]))
+        # ---- Mamba/SSD ----------------------------------------------------#
+        if name in ("in_proj", "in_proj_z", "in_proj_x", "in_proj_dt"):
+            return out(fs(shape[0]), md(shape[1]))
+        if name == "out_proj":
+            return out(md(shape[0]), fs(shape[1]))
+        if name == "conv_w":
+            return out(None, md(shape[1]))
+        if name in ("conv_b", "norm_w"):
+            return out(md(shape[0]))
+        if name in ("A_log", "D_skip", "dt_bias"):
+            return out(md(shape[0]))
+        # ---- norms / everything else: replicated ------------------------ #
+        return out()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+# --------------------------------------------------------------------------- #
+# Context-state specs (mirrors models.lm.init_state structure exactly)
+# --------------------------------------------------------------------------- #
+def state_specs(cfg: ArchConfig, batch: int, mesh: Mesh) -> Any:
+    m = axis_size(mesh, MODEL)
+    baxes = batch_axes(mesh)
+    bsize = int(np.prod([axis_size(mesh, a) for a in baxes])) if baxes else 1
+    b = baxes if (baxes and _div(batch, bsize)) else None
+
+    def md(dim: int) -> Optional[str]:
+        return MODEL if _div(dim, m) else None
+
+    if cfg.family == "encdec":
+        kv = cfg.n_kv_heads
+        kv_spec = KVCache(
+            P(None, b, None, md(kv), None), P(None, b, None, md(kv), None)
+        )
+        return EncDecState(pos=P(b), self_kv=kv_spec, cross_kv=kv_spec)
+
+    kinds, _ = lm._layout(cfg)
+
+    def per_kind(kind: blocks.BlockKind) -> BlockCache:
+        if kind.mixer == "a":
+            kv = cfg.n_kv_heads
+            hd = cfg.resolved_head_dim
+            # cache fallback is a separate knob from the weight fallback: a
+            # replicated KV cache can exceed HBM for long-context decode, so
+            # "hd" stays the default even under REPRO_ATTN_SHARDING=replicate.
+            if os.environ.get("REPRO_ATTN_KV_SHARD") == "1":
+                # length-sharded cache matching the shard_map flash attention
+                # (kernels/ops.py _kv_sharded_attention)
+                spec = P(None, b, MODEL, None, None)
+                return BlockCache(KVCache(spec, spec), None)
+            cache_fb = os.environ.get("REPRO_KV_CACHE_SHARDING", "hd")
+            tail = None if cache_fb == "replicate" else md(hd)
+            spec = P(None, b, None, md(kv), None if _div(kv, m) else tail)
+            return BlockCache(KVCache(spec, spec), None)
+        s = cfg.ssm
+        d_in = s.d_inner(cfg.d_model)
+        conv_dim = d_in + 2 * s.n_groups * s.d_state
+        h = s.n_ssm_heads(cfg.d_model)
+        return BlockCache(
+            None,
+            MambaState(
+                conv=P(None, b, None, md(conv_dim)),
+                ssd=P(None, b, md(h), None, None),
+            ),
+        )
+
+    return LMState(pos=P(b), caches=tuple(per_kind(k) for k in kinds))
+
+
+# --------------------------------------------------------------------------- #
+# Batch (token/embed/label) specs
+# --------------------------------------------------------------------------- #
+def data_specs(cfg: ArchConfig, batch_kwargs: Any, batch: int, mesh: Mesh) -> Any:
+    baxes = batch_axes(mesh)
+    bsize = int(np.prod([axis_size(mesh, a) for a in baxes])) if baxes else 1
+    b = baxes if (baxes and _div(batch, bsize)) else None
+
+    out = {}
+    for k, v in batch_kwargs.items():
+        if k == "state":
+            out[k] = state_specs(cfg, batch, mesh)
+        else:
+            out[k] = P(b, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

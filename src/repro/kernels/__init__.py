@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (+ jnp oracles) for the serving hot paths."""

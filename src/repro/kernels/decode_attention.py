@@ -1,0 +1,139 @@
+"""Decode attention Pallas kernel (one query token per sequence).
+
+Memory-bound by design: each step streams the sequence's KV cache once
+(the roofline term the serving engine lives on).  Grid (B, KV, nKV) with the
+G grouped query heads of each KV head processed together so the cache is
+read exactly once; flash-style running softmax across kv blocks in VMEM
+scratch.
+
+Ring-buffer (SWA) caches work unchanged: slot validity and window masking
+are position-based (kv_pos carries the absolute position per slot, -1 for
+never-written).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_prefill import _scratch
+
+NEG_INF = -1e30
+
+
+def supported(q, k, v) -> bool:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    return Sq == 1 and H % KV == 0 and hd <= 256
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, qp_ref, kp_ref, valid_ref,
+    o_ref,
+    m_ref, l_ref, acc_ref,
+    *, window: Optional[int], n_kv: int, scale: float, use_valid: bool,
+):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qg = q_ref[0, 0, :, :].astype(jnp.float32)  # [G, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bkv, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    qp = qp_ref[0, 0].astype(jnp.int32)  # scalar
+    kp = kp_ref[0, :].astype(jnp.int32)  # [bkv]
+
+    s = jax.lax.dot_general(
+        qg, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [G, bkv]
+
+    mask = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        mask &= kp > qp - window
+    if use_valid:
+        mask &= valid_ref[0, :]
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret", "block_kv")
+)
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, hd]
+    k: jax.Array,  # [B, L, KV, hd]
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,  # [B, 1]
+    kv_pos: jax.Array,  # [B, L]
+    window: Optional[int] = None,
+    kv_valid: Optional[jax.Array] = None,  # [B, L] bool
+    interpret: bool = False,
+    block_kv: int = 128,
+) -> jax.Array:
+    B, _, H, hd = q.shape
+    L, KV = k.shape[1], k.shape[2]
+    G = H // KV
+
+    bkv = min(block_kv, max(L, 8))
+    pad = (-L) % bkv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        if kv_valid is not None:
+            kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
+    Lp = L + pad
+    n_kv = Lp // bkv
+    use_valid = kv_valid is not None
+    if kv_valid is None:
+        kv_valid = jnp.ones((B, Lp), jnp.bool_)
+
+    # [B, 1, H, hd] -> [B, KV, G, hd] so one grid step covers a KV group.
+    qg = q[:, 0].reshape(B, KV, G, hd)
+
+    kernel = functools.partial(
+        _kernel, window=window, n_kv=n_kv, scale=1.0 / (hd**0.5), use_valid=use_valid
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, bkv, 1, hd), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, bkv, 1, hd), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0)),
+            pl.BlockSpec((1, bkv), lambda b, h, ik: (b, ik)),
+            pl.BlockSpec((1, bkv), lambda b, h, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            _scratch((G,), jnp.float32),
+            _scratch((G,), jnp.float32),
+            _scratch((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, q_pos, kv_pos, kv_valid)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,155 @@
+"""Flash attention Pallas kernel for (suffix-)prefill.
+
+The paper's hot path: with KV reuse, prefill runs the *new* tokens' queries
+against [stored-prefix KV ++ new KV].  This kernel implements the
+generalised position-masked attention of ``ref.attention_ref`` (causal
+offsets via q_pos/kv_pos, sliding windows, invalid slots as kv_pos < 0) in
+the canonical TPU flash pattern:
+
+  grid = (B, H, nQ, nKV), kv innermost (sequential on TPU);
+  running (m, l, acc) in VMEM scratch; output block revisited across the kv
+  axis and finalised on the last kv step.
+
+BlockSpec tiling keeps the working set in VMEM:
+  q/out (1, bq, 1, hd) + k/v (1, bkv, 1, hd) + scores (bq, bkv) f32
+  = bq*hd*(2+4) + 2*bkv*hd*2 + 4*bq*bkv  bytes
+  ~= 128*128*6 + 2*128*128*2 + 4*128*128 ~= 0.23 MB  (bq=bkv=128, hd=128)
+MXU alignment: bq, bkv multiples of 128; hd is the lane dim (pad to 128 on
+real TPU for hd<128 heads — interpret mode is exact for any hd).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def supported(q, k, v, window: Optional[int] = None) -> bool:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    return H % KV == 0 and hd <= 256 and q.dtype in (jnp.float32, jnp.bfloat16)
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, qp_ref, kp_ref,  # inputs
+    o_ref,  # output
+    m_ref, l_ref, acc_ref,  # scratch
+    *, causal: bool, window: Optional[int], n_kv: int, scale: float,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # [bq, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bkv, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    qp = qp_ref[0, :].astype(jnp.int32)  # [bq]
+    kp = kp_ref[0, :].astype(jnp.int32)  # [bkv]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bkv]
+
+    mask = (kp >= 0)[None, :]
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        mask &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "interpret", "block_q", "block_kv"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Skv, KV, hd]
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,  # [B, Sq]
+    kv_pos: jax.Array,  # [B, Skv]
+    causal: bool = True,
+    window: Optional[int] = None,
+    interpret: bool = False,
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+
+    bq = min(block_q, max(Sq, 8))
+    bkv = min(block_kv, max(Skv, 8))
+    pad_q = (-Sq) % bq
+    pad_kv = (-Skv) % bkv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        # padded queries mask everything out; final rows are dropped below
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-(2**30))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_kv)), constant_values=-1)
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_kv
+    n_q, n_kv = Sq_p // bq, Skv_p // bkv
+
+    grid = (B, H, n_q, n_kv)
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, n_kv=n_kv, scale=1.0 / (hd**0.5)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bkv, 1, hd), lambda b, h, iq, ik, G=G: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, bkv, 1, hd), lambda b, h, iq, ik, G=G: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, bq), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, bkv), lambda b, h, iq, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq_p, H, hd), q.dtype),
+        scratch_shapes=[
+            _scratch((bq,), jnp.float32),
+            _scratch((bq,), jnp.float32),
+            _scratch((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_pos, kv_pos)
+    return out[:, :Sq]
+
+
+def _scratch(shape, dtype):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover
+        return pl.MemorySpace.ANY  # type: ignore

@@ -1,0 +1,236 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the semantics contract: each Pallas kernel in this package must be
+allclose to the corresponding function here across shape/dtype sweeps
+(``tests/test_kernels_*.py``).  The model zoo also dispatches to these
+implementations on non-TPU backends so the dry-run HLO stays faithful.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite "minus infinity": avoids NaN from (-inf) - (-inf)
+
+
+# --------------------------------------------------------------------------- #
+# Generalised (flash-)attention: one signature for train / prefill /
+# suffix-prefill / decode / sliding-window ring buffers.
+# --------------------------------------------------------------------------- #
+def attention_ref(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Skv, KV, hd]
+    v: jax.Array,  # [B, Skv, KV, hd]
+    *,
+    q_pos: jax.Array,  # [B, Sq] absolute positions of the query tokens
+    kv_pos: jax.Array,  # [B, Skv] absolute positions of the cached kv tokens
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding-window width (None => full)
+    kv_valid: Optional[jax.Array] = None,  # [B, Skv] bool (ring-buffer slots)
+) -> jax.Array:
+    """Grouped-query attention with position-based masking.
+
+    Masking rule for query position p and key position s:
+      keep iff (not causal or s <= p) and (window is None or s > p - window)
+               and kv_valid[s]
+    ``kv_pos < 0`` marks an invalid (never-written) cache slot.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+
+    qp = q_pos[:, None, None, :, None].astype(jnp.int32)  # [B,1,1,Sq,1]
+    sp = kv_pos[:, None, None, None, :].astype(jnp.int32)  # [B,1,1,1,Skv]
+    mask = sp >= 0
+    if causal:
+        mask &= sp <= qp
+    if window is not None:
+        mask &= sp > qp - window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, None, None, :]
+
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = jnp.where(mask, w, 0.0)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    w = w / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_ref_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_valid: Optional[jax.Array] = None,
+    q_chunk: int = 512,
+) -> jax.Array:
+    """attention_ref computed in query chunks (lax.map over q blocks).
+
+    Identical numerics; peak memory O(q_chunk * Skv) instead of O(Sq * Skv)
+    — the jnp analogue of the Pallas flash kernel's tiling, used for long
+    sequences so the dry-run's memory footprint matches the TPU execution
+    plan instead of a materialised S^2 score tensor."""
+    B, Sq, H, hd = q.shape
+    pad = (-Sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-(2**30))
+    nc = (Sq + pad) // q_chunk
+    qc = q.reshape(B, nc, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(B, nc, q_chunk).transpose(1, 0, 2)
+
+    def one(args):
+        qi, qpi = args
+        return attention_ref(
+            qi, k, v, q_pos=qpi, kv_pos=kv_pos, causal=causal, window=window,
+            kv_valid=kv_valid,
+        )
+
+    out = jax.lax.map(one, (qc, qp))  # [nc, B, c, H, hd]
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, Sq + pad, H, hd)
+    return out[:, :Sq]
+
+
+def causal_positions(batch: int, seq: int, offset=0) -> jax.Array:
+    """[B, S] positions ``offset + arange(S)``; offset scalar or [B]."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :]
+    off = jnp.asarray(offset, jnp.int32)
+    off = off[:, None] if off.ndim == 1 else off
+    return jnp.broadcast_to(pos + off, (batch, seq))
+
+
+# --------------------------------------------------------------------------- #
+# Mamba2 / SSD: sequential state-space scan (exact oracle)
+# --------------------------------------------------------------------------- #
+def ssd_scan_ref(
+    x: jax.Array,  # [B, L, H, P]
+    dt: jax.Array,  # [B, L, H]   (already softplus'd, > 0)
+    A: jax.Array,  # [H]          (negative)
+    B_: jax.Array,  # [B, L, G, S]
+    C: jax.Array,  # [B, L, G, S]
+    *,
+    initial_state: Optional[jax.Array] = None,  # [B, H, P, S]
+) -> Tuple[jax.Array, jax.Array]:
+    """Selective state-space recurrence
+        h_t = exp(dt_t * A) * h_{t-1} + dt_t * (x_t ⊗ B_t)
+        y_t = h_t · C_t
+    computed with a plain sequential scan over time — the exactness oracle for
+    the chunked SSD kernel.  Returns (y [B,L,H,P], final_state [B,H,P,S]).
+    """
+    Bsz, L, H, P = x.shape
+    G, S = B_.shape[2], B_.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(B_.astype(jnp.float32), rep, axis=2)  # [B, L, H, S]
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    h0 = (
+        jnp.zeros((Bsz, H, P, S), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,H,S], [B,H,S]
+        decay = jnp.exp(dtt * Af[None, :])[:, :, None, None]  # [B,H,1,1]
+        upd = (dtt[:, :, None] * xt)[..., None] * bt[:, :, None, :]  # [B,H,P,S]
+        h = h * decay + upd
+        y = jnp.einsum("bhps,bhs->bhp", h, ct)
+        return h, y
+
+    inputs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    hT, ys = jax.lax.scan(step, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # [B, L, H, P]
+    return y, hT
+
+
+def ssd_decode_ref(
+    state: jax.Array,  # [B, H, P, S]
+    x_t: jax.Array,  # [B, H, P]
+    dt_t: jax.Array,  # [B, H]
+    A: jax.Array,  # [H]
+    B_t: jax.Array,  # [B, G, S]
+    C_t: jax.Array,  # [B, G, S]
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD update (O(1) decode step)."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    Bf = jnp.repeat(B_t.astype(jnp.float32), rep, axis=1)  # [B,H,S]
+    Cf = jnp.repeat(C_t.astype(jnp.float32), rep, axis=1)
+    decay = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32)[None, :])
+    upd = (dt_t.astype(jnp.float32)[:, :, None] * x_t.astype(jnp.float32))[..., None] * Bf[
+        :, :, None, :
+    ]
+    new_state = state.astype(jnp.float32) * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhps,bhs->bhp", new_state, Cf).astype(x_t.dtype)
+    return y, new_state
+
+
+# --------------------------------------------------------------------------- #
+# KV-cache int8 compression (storage / transfer tier)
+# --------------------------------------------------------------------------- #
+def kv_quant_ref(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-(token, head) int8 quantisation over the channel dim.
+
+    x: [..., hd]  ->  (q int8 [..., hd], scale f32 [..., 1])
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def kv_dequant_ref(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MoE: dense loop-over-experts oracle (tests only — O(E) compute)
+# --------------------------------------------------------------------------- #
+def moe_ref(
+    x: jax.Array,  # [T, D]
+    router_w: jax.Array,  # [D, E]
+    w_gate: jax.Array,  # [E, D, F]
+    w_up: jax.Array,  # [E, D, F]
+    w_down: jax.Array,  # [E, F, D]
+    top_k: int,
+) -> jax.Array:
+    """Exact dropless top-k MoE: every token is processed by each of its
+    top-k experts (computed densely over all experts, then masked)."""
+    xf = x.astype(jnp.float32)
+    logits = xf @ router_w.astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)  # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    def one_expert(e):
+        g = xf @ w_gate[e].astype(jnp.float32)
+        u = xf @ w_up[e].astype(jnp.float32)
+        return (jax.nn.silu(g) * u) @ w_down[e].astype(jnp.float32)  # [T, D]
+
+    all_out = jax.vmap(one_expert)(jnp.arange(router_w.shape[1]))  # [E, T, D]
+    sel = jax.nn.one_hot(top_i, router_w.shape[1], dtype=jnp.float32)  # [T, k, E]
+    weight_e = jnp.einsum("tke,tk->et", sel, top_p)  # [E, T]
+    out = jnp.einsum("etd,et->td", all_out, weight_e)
+    return out.astype(x.dtype)

@@ -1,0 +1,2 @@
+"""Tiered, content-addressed KV/context-state cache (the paper's storage half)."""
+from repro.kvcache import chunks, compression, paged, store, transfer  # noqa: F401

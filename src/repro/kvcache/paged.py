@@ -1,0 +1,165 @@
+"""Context-state extraction/insertion between batched device state and the
+storage tier.
+
+The device-side cache is slotted-dense (DESIGN.md §3): one batch slot per
+active sequence.  The storage-side artifact for a context of L tokens is the
+per-slot slice of the context state:
+
+  * attention layers — K/V rows [0, L)                      (O(L) bytes)
+  * Mamba/SSD layers — (conv tail, SSD state)               (O(1) bytes)
+  * enc-dec          — encoder-output cross-attention KV    (O(L_enc) bytes)
+
+Artifacts are host numpy pytrees (storage is host/remote by definition);
+``insert_slot`` is the load path back into a batched device state.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import KVCache
+from repro.models.blocks import BlockCache
+from repro.models.encdec import EncDecState
+from repro.models.lm import LMState
+from repro.models.ssm import MambaState
+
+
+def _np(tree):
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+# --------------------------------------------------------------------------- #
+# Extract: batched device state -> per-context host artifact
+# --------------------------------------------------------------------------- #
+def extract_slot(cfg: ArchConfig, state: Any, slot: int, length: int) -> Any:
+    """Pull slot ``slot``'s first ``length`` tokens of context state."""
+    if isinstance(state, EncDecState):
+        return _np(
+            EncDecState(
+                # context is the audio: the decoder restarts at pos 0 on reuse
+                pos=jnp.zeros((1,), jnp.int32),
+                # decoder self-KV is per-request (prompt side), not context
+                self_kv=KVCache(
+                    state.self_kv.k[:, slot : slot + 1, :0],
+                    state.self_kv.v[:, slot : slot + 1, :0],
+                ),
+                cross_kv=KVCache(
+                    state.cross_kv.k[:, slot : slot + 1],
+                    state.cross_kv.v[:, slot : slot + 1],
+                ),
+            )
+        )
+    assert isinstance(state, LMState)
+
+    def per_cache(c: BlockCache) -> BlockCache:
+        if c.attn is not None:
+            return BlockCache(
+                KVCache(
+                    c.attn.k[:, slot : slot + 1, :length],
+                    c.attn.v[:, slot : slot + 1, :length],
+                ),
+                None,
+            )
+        return BlockCache(
+            None,
+            MambaState(
+                conv=c.mamba.conv[:, slot : slot + 1],
+                ssd=c.mamba.ssd[:, slot : slot + 1],
+            ),
+        )
+
+    return _np(
+        LMState(
+            pos=jnp.full((1,), length, jnp.int32),
+            caches=tuple(per_cache(c) for c in state.caches),
+        )
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Insert: host artifact -> slot of a batched device state
+# --------------------------------------------------------------------------- #
+def insert_slot(
+    cfg: ArchConfig, state: Any, slot: int, artifact: Any, n_tokens: int = None
+) -> Any:
+    """Write a stored context into batch slot ``slot``; returns the new state
+    with ``pos[slot]`` set to the artifact's token count (or ``n_tokens`` for
+    a partial-prefix insert of attention KV)."""
+    art_pos = int(np.asarray(artifact.pos)[0])
+    L = art_pos if n_tokens is None else min(n_tokens, art_pos)
+
+    if isinstance(state, EncDecState):
+        assert isinstance(artifact, EncDecState)
+        ck = state.cross_kv
+        new_cross = KVCache(
+            ck.k.at[:, slot].set(jnp.asarray(artifact.cross_kv.k[:, 0], ck.k.dtype)),
+            ck.v.at[:, slot].set(jnp.asarray(artifact.cross_kv.v[:, 0], ck.v.dtype)),
+        )
+        # self-KV prefix (0 rows for a stored context artifact; the prompt's
+        # rows when installing a freshly prefilled batch-1 state).
+        sk = state.self_kv
+        L_self = artifact.self_kv.k.shape[2]
+        if L_self > 0:
+            sk = KVCache(
+                jax.lax.dynamic_update_slice(
+                    sk.k,
+                    jnp.asarray(artifact.self_kv.k[:, :, :L_self], sk.k.dtype),
+                    (0, slot, 0, 0, 0),
+                ),
+                jax.lax.dynamic_update_slice(
+                    sk.v,
+                    jnp.asarray(artifact.self_kv.v[:, :, :L_self], sk.v.dtype),
+                    (0, slot, 0, 0, 0),
+                ),
+            )
+        return EncDecState(
+            pos=state.pos.at[slot].set(artifact.pos[0]),
+            self_kv=sk,
+            cross_kv=new_cross,
+        )
+
+    assert isinstance(state, LMState) and isinstance(artifact, LMState)
+
+    def per_cache(c: BlockCache, a: BlockCache) -> BlockCache:
+        if c.attn is not None:
+            ak = jnp.asarray(a.attn.k[:, 0, :L], c.attn.k.dtype)
+            av = jnp.asarray(a.attn.v[:, 0, :L], c.attn.v.dtype)
+            return BlockCache(
+                KVCache(
+                    jax.lax.dynamic_update_slice(
+                        c.attn.k, ak[:, None], (0, slot, 0, 0, 0)
+                    ),
+                    jax.lax.dynamic_update_slice(
+                        c.attn.v, av[:, None], (0, slot, 0, 0, 0)
+                    ),
+                ),
+                None,
+            )
+        # SSM state is all-or-nothing (O(1) snapshot at full context length).
+        return BlockCache(
+            None,
+            MambaState(
+                conv=c.mamba.conv.at[:, slot].set(
+                    jnp.asarray(a.mamba.conv[:, 0], c.mamba.conv.dtype)
+                ),
+                ssd=c.mamba.ssd.at[:, slot].set(
+                    jnp.asarray(a.mamba.ssd[:, 0], c.mamba.ssd.dtype)
+                ),
+            ),
+        )
+
+    return LMState(
+        pos=state.pos.at[slot].set(L),
+        caches=tuple(per_cache(c, a) for c, a in zip(state.caches, artifact.caches)),
+    )
+
+
+def partial_reuse_allowed(cfg: ArchConfig) -> bool:
+    """Partial-prefix reuse needs per-position state (attention KV).  SSM /
+    hybrid / enc-dec store O(1)-or-encoder state snapshots at full context
+    length only => all-or-nothing (DESIGN.md §6)."""
+    return cfg.family in ("dense", "moe", "vlm") and cfg.n_ssm_layers == 0

@@ -1,0 +1,74 @@
+"""Simulated-time transfer accounting over real data movement.
+
+This container has no TPU/storage fabric, so the framework moves *real
+tensors* (host numpy <-> device) while charging *modeled time* from the
+analytical PerfModel — the same split the dry-run uses for compute.  All
+delay/cost numbers the serving engine reports flow through this module, so
+the modeling surface is one screen of code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.perf_model import PerfModel
+from repro.core.pricing import GB, Pricing
+
+
+class SimClock:
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0, dt
+        self.now += dt
+        return self.now
+
+    def at_least(self, t: float) -> float:
+        self.now = max(self.now, t)
+        return self.now
+
+
+@dataclasses.dataclass
+class TransferStats:
+    loaded_bytes: float = 0.0
+    stored_bytes: float = 0.0
+    load_events: int = 0
+    store_events: int = 0
+    load_time_s: float = 0.0
+    store_time_s: float = 0.0
+
+
+class TransferModel:
+    """Load/store delay + $ accounting for each storage tier."""
+
+    def __init__(self, perf: PerfModel, pricing: Pricing):
+        self.perf = perf
+        self.pricing = pricing
+        self.stats: Dict[str, TransferStats] = {}
+
+    def _tier_stats(self, tier: str) -> TransferStats:
+        return self.stats.setdefault(tier, TransferStats())
+
+    def load_delay(self, nbytes: float, tier_name: str) -> float:
+        t = self.perf.kv_load_time(nbytes, self.pricing.tier(tier_name))
+        s = self._tier_stats(tier_name)
+        s.loaded_bytes += nbytes
+        s.load_events += 1
+        s.load_time_s += t
+        return t
+
+    def store_delay(self, nbytes: float, tier_name: str) -> float:
+        t = self.perf.kv_store_time(nbytes, self.pricing.tier(tier_name))
+        s = self._tier_stats(tier_name)
+        s.stored_bytes += nbytes
+        s.store_events += 1
+        s.store_time_s += t
+        return t
+
+    def transfer_fees(self) -> float:
+        total = 0.0
+        for name, s in self.stats.items():
+            tier = self.pricing.tier(name)
+            total += tier.per_gb_transfer_fee * (s.loaded_bytes + s.stored_bytes) / GB
+        return total

@@ -1,0 +1,336 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape x mesh) cell this lowers + compiles the
+real step function (train_step / prefill / decode) against ShapeDtypeStruct
+inputs with the production shardings, then records:
+
+  * memory_analysis()  — bytes per device (proves fit / flags overflow),
+  * cost_analysis()    — HLO FLOPs + bytes for the roofline terms,
+  * collective bytes   — parsed from the post-SPMD optimized HLO text
+                         (all-gather / all-reduce / reduce-scatter /
+                          all-to-all / collective-permute),
+
+into ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` for
+``benchmarks/roofline.py`` and EXPERIMENTS.md.
+
+NOTE the XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init); this module is the only place that forces 512
+host devices.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get_config
+from repro.configs.base import SHAPES, cell_is_runnable
+from repro.configs.shapes import input_specs
+from repro.distributed import sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in post-SPMD optimized HLO."""
+    totals = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shapes_blob, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_blob):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        totals[op] = totals.get(op, 0) + nbytes
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return totals
+
+
+def _param_like(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (fn, kwargs_of_specs, in_shardings_tree)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cell = input_specs(cfg, shape)
+    api = registry.get_model(cfg)
+
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_spec = jax.eval_shape(lambda k: api.init(k, cfg), key_spec)
+    p_specs = sharding.param_specs(cfg, params_spec, mesh)
+    d_specs = sharding.data_specs(cfg, cell.batch, shape.global_batch, mesh)
+
+    if cell.kind == "train":
+        opt = AdamW(lr=1e-4)
+        opt_state_spec = jax.eval_shape(opt.init, params_spec)
+        o_specs = __import__("repro.training.optimizer", fromlist=["opt_specs"]).opt_specs(
+            p_specs, params_spec, mesh
+        )
+        step = make_train_step(cfg, opt)
+        fn = lambda params, opt_state, batch: step(params, opt_state, batch)
+        args = (params_spec, opt_state_spec, cell.batch)
+        in_shard = (p_specs, o_specs, d_specs)
+        return fn, args, in_shard
+
+    if cell.kind == "prefill":
+        def fn(params, batch):
+            tokens = batch.get("tokens")
+            embeds = batch.get("embeds")
+            state = batch["state"]
+            if cfg.family == "encdec":
+                return api.prefill(params, cfg, tokens, state, embeds=embeds)
+            if embeds is not None:
+                return api.prefill(params, cfg, tokens, state, embeds=embeds)
+            return api.prefill(params, cfg, tokens, state)
+
+        return fn, (params_spec, cell.batch), (p_specs, d_specs)
+
+    def fn(params, batch):
+        return api.decode(params, cfg, batch["tokens"], batch["state"])
+
+    return fn, (params_spec, cell.batch), (p_specs, d_specs)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             tag: str = "") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{tag}" if tag else ""
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": SHAPES[shape_name].kind, "runnable": ok,
+    }
+    if not ok:
+        record["skip_reason"] = why
+        out_path.write_text(json.dumps(record, indent=2))
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, in_shard = build_cell(arch, shape_name, mesh)
+        with mesh:
+            named = sharding.to_named(in_shard, mesh)
+            lowered = jax.jit(fn, in_shardings=named).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        record.update(
+            ok=True,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops=float(cost.get("flops", 0.0)),
+            bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+            collectives=coll,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None
+                ),
+            },
+            hlo_collective_lines=len(
+                [l for l in hlo.splitlines() if _COLLECTIVE_RE.search(l)]
+            ),
+        )
+        print(
+            f"[dryrun] OK  {arch:24s} {shape_name:12s} {mesh_name:10s} "
+            f"flops={record['flops']:.3e} coll={coll['total']/1e9:.2f}GB "
+            f"compile={t_compile:.1f}s"
+        )
+    except Exception as e:  # noqa: BLE001 — record and keep sweeping
+        record.update(ok=False, error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] FAIL {arch} {shape_name} {mesh_name}: {e}")
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def calibrate_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path) -> dict:
+    """Depth calibration: XLA cost_analysis counts a while-loop body ONCE, so
+    the full-model numbers undercount the scanned layers.  Compile UNROLLED
+    1-period and 2-period variants; the difference is the exact per-period
+    cost and roofline.py extrapolates linearly to the real depth:
+
+        f(d) = const + d*per_period   =>   f(D) = f1 + (D - 1)*(f2 - f1)
+    """
+    import dataclasses
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = os.environ.get("REPRO_DRYRUN_TAG", "")
+    suffix = f"__{tag}" if tag else ""
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}__calib.json"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return {}
+    period = cfg.n_layers // cfg.n_attn_layers if False else None
+    from repro.models.blocks import block_kinds
+
+    p_len = len(block_kinds(cfg)) if cfg.family != "encdec" else 1
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "periods_full": cfg.n_layers // p_len}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    for tag, mult in (("d1", 1), ("d2", 2)):
+        sub = dict(n_layers=p_len * mult, scan_unroll=True)
+        if cfg.family == "encdec":
+            sub["n_encoder_layers"] = mult
+        cfg_small = dataclasses.replace(cfg, **sub)
+        # register so get_config-independent paths (registry caches) stay clean
+        import repro.configs as C
+
+        C.CONFIGS[cfg_small.name] = cfg_small
+        try:
+            fn, args_, in_shard = _build_for(cfg_small, shape_name, mesh)
+            with mesh:
+                named = sharding.to_named(in_shard, mesh)
+                compiled = jax.jit(fn, in_shardings=named).lower(*args_).compile()
+                cost = compiled.cost_analysis()
+                coll = collective_bytes(compiled.as_text())
+            record[tag] = {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+                "collective_total": coll["total"],
+            }
+        except Exception as e:  # noqa: BLE001
+            record[tag] = {"error": f"{type(e).__name__}: {e}"}
+        finally:
+            C.CONFIGS.pop(cfg_small.name, None)
+    out_path.write_text(json.dumps(record, indent=2))
+    ok1 = "error" not in record.get("d1", {"error": 1})
+    ok2 = "error" not in record.get("d2", {"error": 1})
+    print(f"[calib] {arch} {shape_name} {mesh_name}: d1={'ok' if ok1 else 'FAIL'} d2={'ok' if ok2 else 'FAIL'}")
+    return record
+
+
+def _build_for(cfg, shape_name, mesh):
+    """build_cell but for an explicit (possibly depth-reduced) config."""
+    shape = SHAPES[shape_name]
+    cell = input_specs(cfg, shape)
+    api = registry.get_model(cfg)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_spec = jax.eval_shape(lambda k: api.init(k, cfg), key_spec)
+    p_specs = sharding.param_specs(cfg, params_spec, mesh)
+    d_specs = sharding.data_specs(cfg, cell.batch, shape.global_batch, mesh)
+    if cell.kind == "train":
+        from repro.training.optimizer import opt_specs as _opt_specs
+
+        opt = AdamW(lr=1e-4)
+        opt_state_spec = jax.eval_shape(opt.init, params_spec)
+        o_specs = _opt_specs(p_specs, params_spec, mesh)
+        step = make_train_step(cfg, opt)
+        return (
+            lambda params, opt_state, batch: step(params, opt_state, batch),
+            (params_spec, opt_state_spec, cell.batch),
+            (p_specs, o_specs, d_specs),
+        )
+    if cell.kind == "prefill":
+        def fn(params, batch):
+            return api.prefill(
+                params, cfg, batch.get("tokens"), batch["state"],
+                embeds=batch.get("embeds"),
+            ) if (cfg.family == "encdec" or "embeds" in batch) else api.prefill(
+                params, cfg, batch["tokens"], batch["state"]
+            )
+
+        return fn, (params_spec, cell.batch), (p_specs, d_specs)
+
+    def fn(params, batch):
+        return api.decode(params, cfg, batch["tokens"], batch["state"])
+
+    return fn, (params_spec, cell.batch), (p_specs, d_specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run driver")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="depth-calibration compiles (see calibrate_cell)")
+    ap.add_argument("--tag", default="", help="artifact suffix (perf variants)")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = list(ASSIGNED) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                tag = args.tag or os.environ.get("REPRO_DRYRUN_TAG", "")
+                suffix = (f"__{tag}" if tag else "") + (
+                    "__calib" if args.calibrate else ""
+                )
+                f = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+                if args.skip_existing and f.exists():
+                    prev = json.loads(f.read_text())
+                    if args.calibrate or prev.get("ok") or not prev.get("runnable", True):
+                        continue
+                if args.calibrate:
+                    calibrate_cell(arch, shape_name, multi, out_dir)
+                    continue
+                rec = run_cell(arch, shape_name, multi, out_dir, tag=args.tag)
+                if not rec.get("runnable", True):
+                    n_skip += 1
+                elif rec.get("ok"):
+                    n_ok += 1
+                else:
+                    n_fail += 1
+    print(f"[dryrun] done: ok={n_ok} fail={n_fail} documented-skips={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Production serving launcher.
+
+On a TPU host this binds the engine to the pod mesh and real request
+ingress; in this container it runs the same engine against a synthetic
+context-sharing workload (reduced compute, full-size economics via
+``--cost-arch``) — the launcher surface is identical either way.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama-7b \
+        --requests 32 --contexts 8 --policy cost --compress
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config, list_configs, reduced_config
+from repro.core.perf_model import PerfModel, V100_X4_HF, tpu_v5e
+from repro.core.pricing import AWS_PAPER, tpu_v5e_pod
+from repro.data.synthetic import WorkloadSpec, serving_workload
+from repro.models import registry
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.scheduler import HedgePolicy
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="serving launcher")
+    ap.add_argument("--arch", default="llama-7b", choices=list_configs())
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--contexts", type=int, default=8)
+    ap.add_argument("--context-len", type=int, default=96)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--output-len", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--policy", default="cost", choices=["cost", "always", "never"])
+    ap.add_argument("--compress", action="store_true", help="int8 storage tier")
+    ap.add_argument("--overlap", action="store_true", help="prefetch overlap")
+    ap.add_argument("--hedge", action="store_true", help="hedged storage reads")
+    ap.add_argument("--platform", default="paper", choices=["paper", "tpu"])
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="run reduced compute with full-size economics (CPU)")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    full_cfg = get_config(args.arch)
+    cfg = reduced_config(full_cfg) if args.reduced else full_cfg
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+
+    if args.platform == "tpu":
+        pricing, perf = tpu_v5e_pod(256), PerfModel(tpu_v5e(256))
+    else:
+        pricing, perf = AWS_PAPER, PerfModel(V100_X4_HF)
+
+    ec = EngineConfig(
+        max_slots=args.slots,
+        max_len=args.context_len + args.prompt_len + args.output_len + 32,
+        chunk_tokens=16,
+        reuse_enabled=args.policy != "never",
+        policy_mode="cost" if args.policy == "never" else args.policy,
+        compress_tier="io2" if args.compress else None,
+        overlap_load=args.overlap,
+        hedge=HedgePolicy() if args.hedge else None,
+        cost_arch=args.arch if args.reduced else None,
+    )
+    engine = ServingEngine(cfg, params, engine_cfg=ec, pricing=pricing, perf=perf)
+
+    spec = WorkloadSpec(
+        n_contexts=args.contexts,
+        reuses_per_context=max(1, args.requests // args.contexts),
+        context_len=args.context_len,
+        prompt_len=args.prompt_len,
+        output_len=args.output_len,
+        arrival_rate_per_s=2.0,
+    )
+    for req in serving_workload(cfg, spec):
+        engine.submit(req)
+    summary = engine.run()
+
+    if args.json:
+        print(json.dumps({**summary.as_dict(), "store": engine.store.stats()}, indent=2))
+    else:
+        print(f"served {summary.n_requests} requests "
+              f"({summary.reuse_hits} reuse hits) on {cfg.name}")
+        print(f"  cost ${summary.total_cost:.4f} "
+              f"(compute {summary.compute_cost:.4f} / storage {summary.storage_cost:.6f} "
+              f"/ transfer {summary.transfer_cost:.6f})")
+        print(f"  TTFT mean {summary.mean_ttft_s:.3f}s p99 {summary.p99_ttft_s:.3f}s; "
+              f"e2e p99 {summary.p99_e2e_s:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Core neural-net layers: embeddings, positional encodings, norms, MLPs."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.common import KeyGen, Params
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embedding (Llama rotate-half convention)
+# --------------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float, dtype=jnp.float32) -> jax.Array:
+    half = head_dim // 2
+    return (theta ** (-np.arange(0, half) / half)).astype(dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (absolute token positions)."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d_model: int, dtype=jnp.float32) -> jax.Array:
+    """Standard transformer sinusoidal table (Whisper encoder)."""
+    pos = np.arange(max_len)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * dim / d_model)
+    table = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(table, dtype=dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def init_norm(cfg: ArchConfig) -> Params:
+    if cfg.norm_type == "layernorm":
+        return {
+            "scale": jnp.ones((cfg.d_model,), common.resolve_dtype(cfg.param_dtype)),
+            "bias": jnp.zeros((cfg.d_model,), common.resolve_dtype(cfg.param_dtype)),
+        }
+    return {"scale": jnp.ones((cfg.d_model,), common.resolve_dtype(cfg.param_dtype))}
+
+
+def apply_norm(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return common.layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return common.rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / LM head
+# --------------------------------------------------------------------------- #
+def init_embedding(key: jax.Array, cfg: ArchConfig) -> Params:
+    kg = KeyGen(key)
+    pdtype = common.resolve_dtype(cfg.param_dtype)
+    params: Params = {"table": common.embed_init(kg(), (cfg.padded_vocab, cfg.d_model), pdtype)}
+    if not cfg.tie_embeddings:
+        params["head"] = common.dense_init(
+            kg(), (cfg.d_model, cfg.padded_vocab), pdtype, fan_in=cfg.d_model
+        )
+    return params
+
+
+def embed_tokens(p: Params, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0)
+    return x.astype(common.resolve_dtype(cfg.dtype))
+
+
+def lm_logits(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Final-hidden -> vocab logits (f32 for a stable softmax/loss)."""
+    if cfg.tie_embeddings:
+        w = p["table"].astype(jnp.float32)
+        return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), w)
+    w = p["head"].astype(jnp.float32)
+    return jnp.einsum("...d,dv->...v", x.astype(jnp.float32), w)
+
+
+# --------------------------------------------------------------------------- #
+# MLP (SwiGLU for llama-family; GELU for Whisper)
+# --------------------------------------------------------------------------- #
+def init_mlp(key: jax.Array, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    pdtype = common.resolve_dtype(cfg.param_dtype)
+    kg = KeyGen(key)
+    if cfg.mlp_type == "gelu":
+        return {
+            "w1": common.dense_init(kg(), (cfg.d_model, d_ff), pdtype),
+            "b1": jnp.zeros((d_ff,), pdtype),
+            "w2": common.dense_init(kg(), (d_ff, cfg.d_model), pdtype, fan_in=d_ff),
+            "b2": jnp.zeros((cfg.d_model,), pdtype),
+        }
+    return {
+        "w_gate": common.dense_init(kg(), (cfg.d_model, d_ff), pdtype),
+        "w_up": common.dense_init(kg(), (cfg.d_model, d_ff), pdtype),
+        "w_down": common.dense_init(kg(), (d_ff, cfg.d_model), pdtype, fan_in=d_ff),
+    }
+
+
+def apply_mlp(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    if cfg.mlp_type == "gelu":
+        h = jnp.einsum("...d,df->...f", x, p["w1"].astype(dtype)) + p["b1"].astype(dtype)
+        h = jax.nn.gelu(h)
+        return jnp.einsum("...f,fd->...d", h, p["w2"].astype(dtype)) + p["b2"].astype(dtype)
+    gate = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dtype))
+    up = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dtype))
+    h = common.swiglu(gate, up)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(dtype))

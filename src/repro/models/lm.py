@@ -1,0 +1,203 @@
+"""Decoder-only LM over block stacks (dense / MoE / SSM / hybrid / VLM).
+
+Layer stacking: the model scans over *periods* (``blocks.block_kinds``); a
+uniform arch has period length 1 (pure ``lax.scan`` over all layers — keeps
+HLO size O(1) in depth so 512-device SPMD compiles stay tractable); Jamba
+unrolls its 8-layer period inside a scan over 9 periods.
+
+API (all pure):
+  init(key, cfg) -> params
+  forward(params, cfg, tokens, embeds=None) -> (logits [B,S,V], aux)
+  init_state(cfg, batch, max_len) -> LMState
+  prefill(params, cfg, tokens, state, embeds=None) -> (last_logits [B,V], LMState)
+  decode(params, cfg, tokens [B,1], state) -> (logits [B,V], LMState)
+
+``prefill`` is *suffix* prefill whenever ``state.pos > 0``: positions
+``[0, state.pos)`` of the caches are treated as reused context state (the
+paper's technique) and are not recomputed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks, layers
+from repro.models.common import KeyGen, Params, init_stacked, resolve_dtype
+
+
+class LMState(NamedTuple):
+    """Decode/prefill context state ("ContextState" in DESIGN.md)."""
+
+    pos: jax.Array  # [B] — tokens already in the caches
+    caches: Tuple[blocks.BlockCache, ...]  # one per period position, stacked over periods
+
+
+def _layout(cfg: ArchConfig):
+    kinds = blocks.block_kinds(cfg)
+    assert cfg.n_layers % len(kinds) == 0, (cfg.name, cfg.n_layers, len(kinds))
+    return kinds, cfg.n_layers // len(kinds)
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+def init(key: jax.Array, cfg: ArchConfig) -> Params:
+    kinds, n_periods = _layout(cfg)
+    kg = KeyGen(key)
+    layer_stacks = [
+        init_stacked(kg(), n_periods, lambda k, kind=kind: blocks.init_block(k, cfg, kind))
+        for kind in kinds
+    ]
+    return {
+        "embed": layers.init_embedding(kg(), cfg),
+        "layers": layer_stacks,
+        "final_norm": layers.init_norm(cfg),
+    }
+
+
+def init_state(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> LMState:
+    kinds, n_periods = _layout(cfg)
+
+    def stacked(kind):
+        one = blocks.init_block_cache(cfg, kind, batch, max_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda l: jnp.zeros((n_periods,) + l.shape, l.dtype), one
+        )
+
+    return LMState(
+        pos=jnp.zeros((batch,), jnp.int32), caches=tuple(stacked(k) for k in kinds)
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Embedding (VLM stub frontends prepend precomputed patch embeddings)
+# --------------------------------------------------------------------------- #
+def _embed_inputs(
+    params: Params, cfg: ArchConfig, tokens: Optional[jax.Array], embeds: Optional[jax.Array]
+) -> jax.Array:
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(resolve_dtype(cfg.dtype)))
+    if tokens is not None:
+        parts.append(layers.embed_tokens(params["embed"], cfg, tokens))
+    assert parts, "need tokens and/or embeds"
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# Training forward (no cache)
+# --------------------------------------------------------------------------- #
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    kinds, _ = _layout(cfg)
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def period_fn(x, layer_params):
+        aux = jnp.float32(0.0)
+        for i, kind in enumerate(kinds):
+            x, a = blocks.forward(layer_params[i], cfg, kind, x, positions=positions)
+            aux = aux + a
+        return x, aux
+
+    x, auxes = jax.lax.scan(
+        _remat(cfg, period_fn), x, tuple(params["layers"]), unroll=cfg.scan_unroll
+    )
+    x = layers.apply_norm(params["final_norm"], cfg, x)
+    logits = layers.lm_logits(params["embed"], cfg, x)
+    return logits, jnp.sum(auxes)
+
+
+# --------------------------------------------------------------------------- #
+# Prefill (full when state.pos == 0; suffix when state.pos > 0)
+# --------------------------------------------------------------------------- #
+def prefill(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: Optional[jax.Array],
+    state: LMState,
+    embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, LMState]:
+    kinds, _ = _layout(cfg)
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    B, S, _ = x.shape
+    offset = state.pos
+
+    def period_fn(x, per):
+        layer_params, caches = per
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            x, c, _ = blocks.prefill(layer_params[i], cfg, kind, x, caches[i], offset)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        _remat(cfg, period_fn), x, (tuple(params["layers"]), state.caches),
+        unroll=cfg.scan_unroll,
+    )
+    x = layers.apply_norm(params["final_norm"], cfg, x[:, -1:])
+    logits = layers.lm_logits(params["embed"], cfg, x)[:, 0]
+    return logits, LMState(pos=offset + S, caches=new_caches)
+
+
+# --------------------------------------------------------------------------- #
+# Decode (one token per sequence)
+# --------------------------------------------------------------------------- #
+def decode(
+    params: Params, cfg: ArchConfig, tokens: jax.Array, state: LMState
+) -> Tuple[jax.Array, LMState]:
+    kinds, _ = _layout(cfg)
+    x = _embed_inputs(params, cfg, tokens, None)
+    pos = state.pos
+
+    def period_fn(x, per):
+        layer_params, caches = per
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            x, c = blocks.decode(layer_params[i], cfg, kind, x, caches[i], pos)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        period_fn, x, (tuple(params["layers"]), state.caches), unroll=cfg.scan_unroll
+    )
+    x = layers.apply_norm(params["final_norm"], cfg, x)
+    logits = layers.lm_logits(params["embed"], cfg, x)[:, 0]
+    return logits, LMState(pos=pos + 1, caches=new_caches)
+
+
+# --------------------------------------------------------------------------- #
+# Loss
+# --------------------------------------------------------------------------- #
+def cross_entropy(
+    logits: jax.Array,  # [B, S, V] (activation dtype; upcast internally)
+    labels: jax.Array,  # [B, S] int32
+    mask: Optional[jax.Array] = None,  # [B, S] float/bool
+) -> jax.Array:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)  # [B, S]
+    label_logit = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    nll = lse - label_logit
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,82 @@
+"""Uniform model API over all families + parameter counting via eval_shape."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, lm
+
+
+class ModelApi(NamedTuple):
+    """Family-dispatched pure functions sharing one signature set.
+
+    * init(key, cfg) -> params
+    * forward(params, cfg, **batch) -> (logits, aux)        [training]
+    * init_state(cfg, batch, max_len) -> state pytree
+    * prefill(params, cfg, tokens, state, embeds=None) -> (last_logits, state)
+    * decode(params, cfg, tokens, state) -> (logits, state)
+    """
+
+    init: Callable[..., Any]
+    forward: Callable[..., Any]
+    init_state: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+
+
+def get_model(cfg: ArchConfig) -> ModelApi:
+    if cfg.family == "encdec":
+        return ModelApi(
+            init=encdec.init,
+            forward=encdec.forward,
+            init_state=encdec.init_state,
+            prefill=encdec.prefill,
+            decode=encdec.decode,
+        )
+    return ModelApi(
+        init=lm.init,
+        forward=lm.forward,
+        init_state=lm.init_state,
+        prefill=lm.prefill,
+        decode=lm.decode,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def count_params(cfg: ArchConfig) -> int:
+    """Exact parameter count via shape-only tracing (no allocation)."""
+    api = get_model(cfg)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    tree = jax.eval_shape(lambda k: api.init(k, cfg), key)
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+@functools.lru_cache(maxsize=None)
+def count_active_params(cfg: ArchConfig) -> int:
+    """Active parameters per token (MoE: only top_k of n_experts count).
+
+    Used for MODEL_FLOPS = 6 * N_active * D in the roofline analysis.
+    """
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    # Expert FFN weights: 3 * d_model * d_ff per expert on MoE layers.
+    kinds = _moe_layer_count(cfg)
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    inactive = kinds * (cfg.moe.n_experts - cfg.moe.top_k) * per_expert
+    return total - inactive
+
+
+def _moe_layer_count(cfg: ArchConfig) -> int:
+    if cfg.family == "hybrid":
+        assert cfg.hybrid_period is not None
+        per = sum(
+            1 for i in range(len(cfg.hybrid_period)) if i % cfg.moe.every == cfg.moe.offset
+        )
+        return per * (cfg.n_layers // len(cfg.hybrid_period))
+    return cfg.n_layers

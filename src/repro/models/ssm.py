@@ -1,0 +1,176 @@
+"""Mamba2 (SSD — state-space duality) mixer layer.
+
+The sequence mixer for the ``mamba2-1.3b`` arch and the Mamba layers of the
+``jamba`` hybrid (Jamba's Mamba-1 layers are implemented in the SSD
+formulation — same O(1) recurrent-state semantics, TPU-friendlier chunked
+matmul form; documented in DESIGN.md §3).
+
+Stored context state (the paper's technique, extended to SSMs): a
+:class:`MambaState` — (conv tail, SSD state) — is O(1) in context length,
+making KV-reuse economics strictly more favorable (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import common
+from repro.models.common import KeyGen, Params
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # [B, d_conv-1, conv_dim]  — tail of pre-conv activations
+    ssd: jax.Array  # [B, H, P, S]              — SSD recurrent state
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    H = s.n_ssm_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, H, conv_dim
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype=None) -> MambaState:
+    s, d_in, H, conv_dim = _dims(cfg)
+    dtype = dtype or common.resolve_dtype(cfg.dtype)
+    return MambaState(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        ssd=jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def init_mamba(key: jax.Array, cfg: ArchConfig) -> Params:
+    s, d_in, H, conv_dim = _dims(cfg)
+    kg = KeyGen(key)
+    pdtype = common.resolve_dtype(cfg.param_dtype)
+    D = cfg.d_model
+    return {
+        # The input projection is stored as three tensors (z | xBC | dt)
+        # rather than one fused [D, 2*d_in+2GS+H] matrix: fused-column splits
+        # land mid-shard under tensor parallelism and cost a 392 GB/step
+        # collective-permute on jamba train (EXPERIMENTS.md §Perf).  Split
+        # weights shard each output dim cleanly (z and xBC boundaries are
+        # head-aligned) at identical FLOPs.
+        "in_proj_z": common.dense_init(kg(), (D, d_in), pdtype, fan_in=D),
+        "in_proj_x": common.dense_init(kg(), (D, conv_dim), pdtype, fan_in=D),
+        "in_proj_dt": common.dense_init(kg(), (D, H), pdtype, fan_in=D),
+        "conv_w": common.dense_init(kg(), (s.d_conv, conv_dim), pdtype, fan_in=s.d_conv),
+        "conv_b": jnp.zeros((conv_dim,), pdtype),
+        # A = -exp(A_log); init A in [1, 16] as in the Mamba2 reference.
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2, jnp.float32))),  # softplus^-1
+        "norm_w": jnp.ones((d_in,), pdtype),
+        "out_proj": common.dense_init(kg(), (d_in, D), pdtype, fan_in=d_in),
+    }
+
+
+def _in_proj(p: Params, x: jax.Array):
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["in_proj_z"].astype(dt_))
+    xBC = jnp.einsum("bsd,de->bse", x, p["in_proj_x"].astype(dt_))
+    dt = jnp.einsum("bsd,de->bse", x, p["in_proj_dt"].astype(dt_))
+    return z, xBC, dt
+
+
+def _causal_conv(
+    p: Params, cfg: ArchConfig, xBC: jax.Array, conv_init: Optional[jax.Array]
+) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over the sequence axis with an optional carried
+    tail (so suffix-prefill is exact across the reuse boundary).
+
+    xBC: [B, S, conv_dim] -> (conv_out [B, S, conv_dim], new tail)."""
+    s = cfg.ssm
+    B, S, Cd = xBC.shape
+    if conv_init is None:
+        conv_init = jnp.zeros((B, s.d_conv - 1, Cd), xBC.dtype)
+    padded = jnp.concatenate([conv_init.astype(xBC.dtype), xBC], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    out = jnp.zeros((B, S, Cd), jnp.float32)
+    for i in range(s.d_conv):
+        out = out + padded[:, i : i + S].astype(jnp.float32) * w[i]
+    out = out + p["conv_b"].astype(jnp.float32)
+    new_tail = padded[:, S:][:, -(s.d_conv - 1) :]
+    return jax.nn.silu(out).astype(xBC.dtype), new_tail
+
+
+def _ssd_inputs(cfg: ArchConfig, conv_out: jax.Array, dt_raw: jax.Array, p: Params):
+    s, d_in, H, _ = _dims(cfg)
+    B, S, _ = conv_out.shape
+    x_in = conv_out[..., :d_in].reshape(B, S, H, s.head_dim)
+    Bmat = conv_out[..., d_in : d_in + s.n_groups * s.d_state].reshape(
+        B, S, s.n_groups, s.d_state
+    )
+    Cmat = conv_out[..., d_in + s.n_groups * s.d_state :].reshape(
+        B, S, s.n_groups, s.d_state
+    )
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    return x_in, dt, A, Bmat, Cmat
+
+
+def _gated_out(p: Params, cfg: ArchConfig, y: jax.Array, z: jax.Array) -> jax.Array:
+    s, d_in, _, _ = _dims(cfg)
+    B = y.shape[0]
+    y = y.reshape(B, -1, d_in)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(y.dtype)), p["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(y.dtype))
+
+
+# --------------------------------------------------------------------------- #
+# Full-sequence forward / (suffix-)prefill
+# --------------------------------------------------------------------------- #
+def forward(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # [B, S, D]
+    state: Optional[MambaState] = None,  # carried state (KV-reuse / prefill)
+) -> Tuple[jax.Array, MambaState]:
+    s, d_in, H, _ = _dims(cfg)
+    z, xBC, dt_raw = _in_proj(p, x)
+    conv_out, conv_tail = _causal_conv(p, cfg, xBC, state.conv if state else None)
+    x_in, dt, A, Bmat, Cmat = _ssd_inputs(cfg, conv_out, dt_raw, p)
+    y, ssd_state = ops.ssd_chunked(
+        x_in, dt, A, Bmat, Cmat, chunk=s.chunk,
+        initial_state=state.ssd if state else None,
+    )
+    y = y + p["D_skip"][None, None, :, None] * x_in.astype(jnp.float32)
+    out = _gated_out(p, cfg, y.astype(x.dtype), z)
+    return out, MambaState(conv=conv_tail, ssd=ssd_state)
+
+
+# --------------------------------------------------------------------------- #
+# O(1) decode step
+# --------------------------------------------------------------------------- #
+def decode(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # [B, 1, D]
+    state: MambaState,
+) -> Tuple[jax.Array, MambaState]:
+    s, d_in, H, Cd = _dims(cfg)
+    B = x.shape[0]
+    z, xBC, dt_raw = _in_proj(p, x)
+
+    window = jnp.concatenate([state.conv.astype(xBC.dtype), xBC], axis=1)  # [B, d_conv, Cd]
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w) + p["conv_b"].astype(
+        jnp.float32
+    )
+    conv_out = jax.nn.silu(conv_out)[:, None, :].astype(xBC.dtype)  # [B, 1, Cd]
+    new_tail = window[:, 1:]
+
+    x_in, dt, A, Bmat, Cmat = _ssd_inputs(cfg, conv_out, dt_raw, p)
+    y_t, ssd_state = ops.ssd_decode(
+        state.ssd, x_in[:, 0], dt[:, 0], A, Bmat[:, 0], Cmat[:, 0]
+    )
+    y_t = y_t.astype(jnp.float32) + p["D_skip"][None, :, None] * x_in[:, 0].astype(jnp.float32)
+    out = _gated_out(p, cfg, y_t[:, None].astype(x.dtype), z)
+    return out, MambaState(conv=new_tail, ssd=ssd_state)

@@ -1,0 +1,3 @@
+"""Continuous-batching serving engine with stored-KV-cache reuse."""
+from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
+from repro.serving.request import Request  # noqa: F401

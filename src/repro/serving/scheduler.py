@@ -1,0 +1,71 @@
+"""Admission scheduling + straggler mitigation for the serving engine.
+
+Admission: FIFO by arrival with an SLO-aware twist — among admissible
+requests, those whose TTFT SLO would be violated by further queueing are
+served first (earliest-deadline-first within the arrived set).
+
+Straggler mitigation: storage loads are *hedged* — if a fetch's modeled delay
+exceeds ``threshold_s``, a duplicate fetch is issued against a replica and
+the tail is served at ``parallelism``-way speed (classic tail-at-scale
+request hedging, applied to the paper's KV-load path).  Decode-side straggler
+handling (per-chip) lives in training/fault.py notes and DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgePolicy:
+    threshold_s: float = 0.5
+    parallelism: int = 2
+    # duplicate fetches cost extra transfer bytes; accounted by the caller
+    extra_bytes_factor: float = 0.2
+
+    def effective_delay(self, delay_s: float) -> float:
+        if delay_s <= self.threshold_s:
+            return delay_s
+        return self.threshold_s + (delay_s - self.threshold_s) / self.parallelism
+
+
+class AdmissionQueue:
+    """Requests ordered by (deadline slack, arrival)."""
+
+    def __init__(self):
+        self._heap: List = []
+        self._n = 0
+
+    def push(self, req: Request) -> None:
+        deadline = (
+            req.arrival_s + req.slo_ttft_s if req.slo_ttft_s is not None else float("inf")
+        )
+        heapq.heappush(self._heap, (req.arrival_s, deadline, self._n, req))
+        self._n += 1
+
+    def pop_admissible(self, now: float) -> Optional[Request]:
+        """Earliest-deadline-first among requests that have arrived."""
+        arrived = [e for e in self._heap if e[0] <= now]
+        if not arrived:
+            return None
+        best = min(arrived, key=lambda e: (e[1], e[0], e[2]))
+        self._heap.remove(best)
+        heapq.heapify(self._heap)
+        return best[3]
+
+    def next_arrival(self) -> Optional[float]:
+        return min((e[0] for e in self._heap), default=None)
+
+    def peek_arrived(self, now: float, limit: int = 4) -> List[Request]:
+        """Arrived-but-unadmitted requests in admission order (no removal) —
+        the prefetch lookahead window."""
+        arrived = sorted(
+            (e for e in self._heap if e[0] <= now), key=lambda e: (e[1], e[0], e[2])
+        )
+        return [e[3] for e in arrived[:limit]]
+
+    def __len__(self) -> int:
+        return len(self._heap)

@@ -1,0 +1,114 @@
+"""AdamW (hand-rolled, dependency-free) + ZeRO-style optimizer sharding.
+
+Moments are fp32 regardless of param dtype.  ``opt_specs`` extends the param
+PartitionSpec tree so that for pure-DP archs the moments are additionally
+sharded over the data axis (ZeRO-1): the largest unsharded, divisible dim of
+each moment gets the ``data`` axis.  FSDP archs already shard params (and
+hence moments) over ``data``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.common import Params
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+    # optional learning-rate schedule: step -> multiplier
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+    def init(self, params: Params) -> AdamState:
+        zeros32 = lambda x: jnp.zeros(x.shape, jnp.float32)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros32, params),
+            v=jax.tree_util.tree_map(zeros32, params),
+        )
+
+    def update(
+        self, grads: Params, state: AdamState, params: Params
+    ) -> Tuple[Params, AdamState]:
+        step = state.step + 1
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+        if self.grad_clip is not None:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(g32))
+            )
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+            g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, g32)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g), state.v, g32
+        )
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+        lr = self.lr * (self.schedule(step) if self.schedule else 1.0)
+
+        def upd(p, mm, vv):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, AdamState(step=step, m=m, v=v)
+
+
+def cosine_schedule(warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+
+    return fn
+
+
+# --------------------------------------------------------------------------- #
+# ZeRO sharding of optimizer state
+# --------------------------------------------------------------------------- #
+def opt_specs(param_spec_tree: Any, params_shapes: Any, mesh: Mesh) -> Any:
+    """Moment specs: param spec + ZeRO-1 data-sharding of any moment whose
+    param is not already data-sharded (largest divisible unsharded dim)."""
+    d = mesh.shape["data"] if "data" in mesh.axis_names else 1
+
+    def one(spec: P, x) -> P:
+        parts = list(spec) + [None] * (len(x.shape) - len(spec))
+        if "data" in parts or d <= 1:
+            return P(*parts)
+        # pick the largest unsharded divisible dim for ZeRO-1 sharding
+        best, best_dim = -1, -1
+        for i, (p, dim) in enumerate(zip(parts, x.shape)):
+            if p is None and dim % d == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best >= 0:
+            parts[best] = "data"
+        return P(*parts)
+
+    m_specs = jax.tree_util.tree_map(
+        one, param_spec_tree, params_shapes, is_leaf=lambda s: isinstance(s, P)
+    )
+    return AdamState(step=P(), m=m_specs, v=m_specs)

@@ -1,0 +1,79 @@
+"""Training step factory: loss, grad, optimizer update, metrics.
+
+One factory serves every family: the batch dict keys select the forward
+signature (decoder-only / VLM embeds / enc-dec frames).  MoE aux
+(load-balancing) loss is folded in with a standard 0.01 coefficient,
+normalised by MoE layer count.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm, registry
+from repro.training.optimizer import AdamW, AdamState
+
+AUX_COEF = 0.01
+
+
+def loss_fn(
+    params: Any, cfg: ArchConfig, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    api = registry.get_model(cfg)
+    if cfg.family == "encdec":
+        logits, aux = api.forward(params, cfg, batch["frames"], batch["dec_tokens"])
+    elif "embeds" in batch:
+        logits, aux = api.forward(
+            params, cfg, batch["tokens"], embeds=batch["embeds"]
+        )
+    else:
+        logits, aux = api.forward(params, cfg, batch["tokens"])
+    ce = lm.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    loss = ce + AUX_COEF * aux / jnp.maximum(cfg.n_layers, 1)
+    return loss, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamW):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics) — pure, jit/pjit-ready."""
+
+    def train_step(params, opt_state: AdamState, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, **parts, "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_grad_accum_step(cfg: ArchConfig, opt: AdamW, accum: int):
+    """Microbatched variant: splits the batch on axis 0 into ``accum`` chunks,
+    accumulating fp32 grads via lax.scan (activation-memory / HBM trade)."""
+
+    def step(params, opt_state: AdamState, batch):
+        def micro(carry, mb):
+            g_acc, l_acc = carry
+            (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g
+            )
+            return (g_acc, l_acc + l), None
+
+        micro_batches = jax.tree_util.tree_map(
+            lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
+        )
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (grads, loss_sum), _ = jax.lax.scan(micro, (zeros, 0.0), micro_batches)
+        grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss_sum / accum, "step": opt_state.step}
+
+    return step

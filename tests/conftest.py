@@ -1,0 +1,13 @@
+import os
+
+# Tests and benches run on the single real CPU device; ONLY launch/dryrun.py
+# forces 512 placeholder devices (per its module docstring).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,116 @@
+"""Per-assigned-architecture smoke tests on REDUCED same-family configs:
+one forward + one train step on CPU, asserting output shapes and no NaNs
+(the FULL configs are exercised only via the dry-run, per the assignment).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, reduced_config
+from repro.models import registry
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step
+
+ARCHS = sorted(ASSIGNED)
+
+
+def _batch(cfg, B=2, S=24, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.family == "encdec":
+        dl = min(cfg.decoder_seq_len, 16)
+        return {
+            "frames": jnp.asarray(
+                rng.standard_normal((B, 32, cfg.d_model)), jnp.float32
+            ),
+            "dec_tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, dl)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, dl)), jnp.int32),
+            "mask": jnp.ones((B, dl), jnp.float32),
+        }
+    if cfg.family == "vlm":
+        ft = cfg.frontend_tokens
+        return {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S - ft)), jnp.int32),
+            "embeds": jnp.asarray(
+                rng.standard_normal((B, ft, cfg.d_model)) * 0.02, jnp.float32
+            ),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+            "mask": jnp.ones((B, S), jnp.float32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+
+    # ---- forward: shape + finiteness ---------------------------------- #
+    if cfg.family == "encdec":
+        logits, _ = api.forward(params, cfg, batch["frames"], batch["dec_tokens"])
+        want = batch["dec_tokens"].shape + (cfg.padded_vocab,)
+    elif cfg.family == "vlm":
+        logits, _ = api.forward(params, cfg, batch["tokens"], embeds=batch["embeds"])
+        want = batch["labels"].shape + (cfg.padded_vocab,)
+    else:
+        logits, _ = api.forward(params, cfg, batch["tokens"])
+        want = batch["tokens"].shape + (cfg.padded_vocab,)
+    assert logits.shape == want
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    # ---- one optimizer step -------------------------------------------- #
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    params2, opt_state, metrics = step(params, opt.init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: non-finite loss"
+    assert int(metrics["step"]) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(
+            jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(params2)
+        )
+    )
+    assert moved, f"{arch}: train step did not update params"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    """prefill(all) == forward(last); one decode step matches forward."""
+    cfg = reduced_config(get_config(arch))
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(1)
+    B, S = 2, 16
+
+    if cfg.family == "encdec":
+        frames = jnp.asarray(rng.standard_normal((B, 32, cfg.d_model)), jnp.float32)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        logits, _ = api.forward(params, cfg, frames, toks)
+        state = api.init_state(cfg, B, 64, enc_len=32)
+        last, state = api.prefill(params, cfg, toks, state, embeds=frames)
+    else:
+        kwargs = {}
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        if cfg.family == "vlm":
+            kwargs["embeds"] = jnp.asarray(
+                rng.standard_normal((B, cfg.frontend_tokens, cfg.d_model)) * 0.02,
+                jnp.float32,
+            )
+        logits, _ = api.forward(params, cfg, toks, **kwargs)
+        state = api.init_state(cfg, B, 64)
+        last, state = api.prefill(params, cfg, toks, state, **kwargs)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(logits[:, -1]), rtol=3e-4, atol=3e-4
+    )
+
+    nxt = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    ld, _ = api.decode(params, cfg, nxt, state)
+    assert ld.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.isfinite(ld).all())

@@ -1,0 +1,147 @@
+"""Chunk trie + tiered store + compression properties (hypothesis-heavy)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kvcache import compression
+from repro.kvcache.chunks import ChunkTrie, chunk_hash_chain
+from repro.kvcache.store import ContextStore
+from repro.kvcache.transfer import SimClock
+
+tokens_st = st.lists(st.integers(0, 999), min_size=0, max_size=120)
+
+
+class TestChunkTrie:
+    @settings(max_examples=60, deadline=None)
+    @given(toks=tokens_st)
+    def test_self_match_is_full(self, toks):
+        t = ChunkTrie(chunk_tokens=8)
+        t.insert(toks, "e")
+        m = t.longest_prefix(toks)
+        assert m.matched_chunks == len(toks) // 8
+        if m.matched_chunks:
+            assert m.entry_id == "e"
+
+    @settings(max_examples=60, deadline=None)
+    @given(toks=tokens_st, cut=st.integers(0, 120), junk=st.integers(0, 999))
+    def test_prefix_monotonicity(self, toks, cut, junk):
+        """Corrupting the suffix never increases the match; the matched part
+        is always a true shared prefix."""
+        t = ChunkTrie(chunk_tokens=8)
+        t.insert(toks, "e")
+        cut = min(cut, len(toks))
+        corrupted = toks[:cut] + [junk + 1000] * (len(toks) - cut)
+        m = t.longest_prefix(corrupted)
+        assert m.matched_tokens <= cut + 7  # can't exceed the intact prefix's chunks
+        assert m.matched_chunks <= len(toks) // 8
+
+    @settings(max_examples=40, deadline=None)
+    @given(a=tokens_st, b=tokens_st)
+    def test_chain_hash_prefix_property(self, a, b):
+        """Chains agree exactly on the shared chunk prefix."""
+        ca, cb = chunk_hash_chain(a, 8), chunk_hash_chain(b, 8)
+        shared = 0
+        for i in range(min(len(a), len(b))):
+            if a[i] != b[i]:
+                break
+            shared += 1
+        same_chunks = shared // 8
+        assert ca[:same_chunks] == cb[:same_chunks]
+        if len(ca) > same_chunks and len(cb) > same_chunks:
+            if a[: (same_chunks + 1) * 8] != b[: (same_chunks + 1) * 8]:
+                assert ca[same_chunks] != cb[same_chunks]
+
+    def test_remove(self):
+        t = ChunkTrie(chunk_tokens=4)
+        toks = list(range(16))
+        chain = t.insert(toks, "e")
+        t.remove(chain, "e")
+        assert t.longest_prefix(toks).matched_chunks == 0
+
+
+class TestContextStore:
+    def _store(self, **kw):
+        return ContextStore(
+            tier_capacities_gb={"host_dram": 1e-6, "io2": 1.0},
+            clock=SimClock(),
+            chunk_tokens=4,
+            **kw,
+        )
+
+    def test_put_lookup_fetch_roundtrip(self):
+        s = self._store()
+        toks = list(range(16))
+        art = {"k": np.ones((2, 16, 4), np.float32)}
+        eid, _ = s.put(toks, art, tier="io2")
+        assert eid is not None
+        m, e = s.lookup(toks)
+        assert e is not None and m.matched_tokens == 16
+        got, delay = s.fetch(e.entry_id)
+        np.testing.assert_array_equal(got["k"], art["k"])
+        assert delay == 0.0  # no transfer model attached
+
+    def test_eviction_under_capacity_pressure(self):
+        s = ContextStore(
+            tier_capacities_gb={"io2": 2e-6},  # 2 KB
+            clock=SimClock(),
+            chunk_tokens=4,
+            eviction="lru",
+        )
+        arts = []
+        for i in range(6):
+            toks = list(range(i * 100, i * 100 + 8))
+            art = {"k": np.full((1, 120), i, np.float32)}  # 480 B each
+            s.put(toks, art, tier="io2")
+            arts.append(toks)
+            s.clock.advance(10.0)
+        assert s.evictions > 0
+        assert s.tiers["io2"].used_bytes <= 2e-6 * 1e9
+        # most recent entry survives LRU
+        m, e = s.lookup(arts[-1])
+        assert e is not None
+
+    def test_gb_hours_accrual(self):
+        s = self._store()
+        art = {"k": np.ones((1, 250), np.float32)}  # 1000 B
+        s.put(list(range(8)), art, tier="io2")
+        s.clock.advance(3600.0)
+        stats = s.stats()
+        assert stats["tiers"]["io2"]["gb_hours"] == pytest.approx(1000 / 1e9, rel=1e-6)
+
+    def test_compressed_tier_roundtrip_error_bounded(self):
+        s = ContextStore(
+            tier_capacities_gb={"io2": 1.0},
+            clock=SimClock(),
+            chunk_tokens=4,
+            compress_tier="io2",
+        )
+        x = np.random.default_rng(0).standard_normal((2, 8, 16)).astype(np.float32)
+        eid, _ = s.put(list(range(8)), {"k": x}, tier="io2")
+        e = s.entries[eid]
+        assert e.compressed and e.nbytes < x.nbytes  # int8 + scales < fp32
+        got, _ = s.fetch(eid)
+        scale = np.abs(x).max(-1, keepdims=True) / 127
+        assert (np.abs(got["k"] - x) <= scale / 2 + 1e-6).all()
+
+
+class TestCompression:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        rows=st.integers(1, 12),
+        hd=st.integers(8, 64),
+        scale=st.floats(0.01, 100.0),
+    )
+    def test_quant_error_bound(self, rows, hd, scale):
+        rng = np.random.default_rng(rows * 1000 + hd)
+        x = jnp.asarray(rng.standard_normal((rows, hd)) * scale, jnp.float32)
+        c = compression.compress_tree({"x": x})
+        y = compression.decompress_tree(c)["x"]
+        bound = np.asarray(compression.max_abs_error_bound(x))[:, None] + 1e-6
+        assert (np.abs(np.asarray(y, np.float32) - np.asarray(x)) <= bound).all()
+
+    def test_bytes_halved_vs_bf16(self):
+        x = jnp.asarray(np.random.standard_normal((4, 256, 128)), jnp.bfloat16)
+        c = compression.compress_tree({"x": x})
+        ratio = compression.tree_nbytes(c) / (x.size * 2)
+        assert ratio < 0.6  # int8 + f32 scale per row ~= 0.52x

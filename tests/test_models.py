@@ -1,0 +1,133 @@
+"""Layer-level model tests: RoPE, ring buffers, MoE vs dense oracle, SSD
+model path vs sequential oracle, suffix-prefill equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.kernels import ref
+from repro.models import attention, layers, moe, registry
+from repro.models.attention import _ring_positions
+
+RNG = np.random.default_rng(7)
+
+
+def test_rope_rotation_preserves_norm_and_relativity():
+    x = jnp.asarray(RNG.standard_normal((2, 8, 4, 16)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8)).astype(jnp.int32)
+    y = layers.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <q_m, k_n> depends only on (m - n)
+    q = jnp.asarray(RNG.standard_normal((1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 1, 1, 16)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = layers.apply_rope(q, jnp.full((1, 1), m, jnp.int32), 1e4)
+        kn = layers.apply_rope(k, jnp.full((1, 1), n, jnp.int32), 1e4)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(102, 100), abs=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(length=st.integers(0, 100), w=st.sampled_from([4, 8, 16]))
+def test_ring_positions_invariants(length, w):
+    pos = np.asarray(_ring_positions(jnp.asarray([length]), w, 1))[0]
+    for j, p in enumerate(pos):
+        if p < 0:
+            assert length <= j  # slot never written
+        else:
+            assert p % w == j
+            assert length - w <= p < length  # within the live window
+
+
+def test_moe_matches_dense_oracle_when_dropless():
+    cfg = reduced_config(
+        get_config("olmoe-1b-7b"),
+        moe=MoEConfig(n_experts=4, top_k=2, capacity_factor=4.0),
+    )
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.standard_normal((2, 12, cfg.d_model)) * 0.3, jnp.float32)
+    out, aux = moe.apply_moe(p, cfg, x)
+    want = ref.moe_ref(
+        x.reshape(-1, cfg.d_model), p["router"], p["w_gate"], p["w_up"], p["w_down"],
+        top_k=2,
+    ).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+    assert float(aux) >= 1.0 - 1e-6  # switch loss lower bound at balance
+
+
+def test_moe_capacity_drops_are_bounded():
+    cfg = reduced_config(
+        get_config("olmoe-1b-7b"),
+        moe=MoEConfig(n_experts=4, top_k=2, capacity_factor=0.5),
+    )
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    out, _ = moe.apply_moe(p, cfg, x)  # must not crash; dropped tokens -> 0 contrib
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_attention_prefill_ring_matches_full_attention():
+    """SWA prefill through the ring buffer == windowed attention over the
+    full sequence, even when S > window."""
+    cfg = reduced_config(get_config("mixtral-8x22b"))  # window 16
+    p = attention.init_attention(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 40  # spans the ring 2.5x
+    x = jnp.asarray(RNG.standard_normal((B, S, cfg.d_model)) * 0.2, jnp.float32)
+    full = attention.forward(p, cfg, x)
+
+    cache = attention.init_kv_cache(cfg, B, 64)
+    out, cache = attention.prefill(p, cfg, x, cache, jnp.zeros((B,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full), atol=1e-4)
+
+    # and decode continues correctly off the ring state
+    x1 = jnp.asarray(RNG.standard_normal((B, 1, cfg.d_model)) * 0.2, jnp.float32)
+    dec, _ = attention.decode(p, cfg, x1, cache, jnp.full((B,), S, jnp.int32))
+    full2 = attention.forward(p, cfg, jnp.concatenate([x, x1], 1))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full2[:, -1]), atol=1e-4)
+
+
+def test_vocab_padding_never_predicted():
+    """Padded vocab rows exist for sharding; check logits shape covers them
+    and real token rows dominate (padding rows are random init, untrained —
+    just assert shape plumbing)."""
+    cfg = reduced_config(get_config("qwen2-0.5b"), vocab=100)  # pads to 128
+    assert cfg.padded_vocab == 128
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(RNG.integers(0, 100, (1, 8)), jnp.int32)
+    logits, _ = api.forward(params, cfg, toks)
+    assert logits.shape[-1] == 128
+
+
+@pytest.mark.parametrize("arch", ["llama-7b", "jamba-1.5-large-398b", "mamba2-1.3b"])
+def test_suffix_prefill_equals_full_prefill(arch):
+    """The paper's mechanism at the model level: prefix state + suffix
+    prefill == one-shot prefill, for attention, hybrid and SSM families."""
+    cfg = reduced_config(get_config(arch))
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(2), cfg)
+    B, S = 2, 24
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    full_state = api.init_state(cfg, B, 64)
+    l_full, full_state = api.prefill(params, cfg, toks, full_state)
+
+    st2 = api.init_state(cfg, B, 64)
+    _, st2 = api.prefill(params, cfg, toks[:, : S // 2], st2)
+    l_suffix, st2 = api.prefill(params, cfg, toks[:, S // 2 :], st2)
+    np.testing.assert_allclose(np.asarray(l_suffix), np.asarray(l_full), atol=3e-4)
+
+    # states must produce identical continuations
+    nxt = jnp.argmax(l_full, -1)[:, None].astype(jnp.int32)
+    d1, _ = api.decode(params, cfg, nxt, full_state)
+    d2, _ = api.decode(params, cfg, nxt, st2)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=3e-4)

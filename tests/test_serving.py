@@ -1,0 +1,219 @@
+"""Serving-engine end-to-end: the paper's pipelines, numerically exact."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import registry
+from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving.scheduler import AdmissionQueue, HedgePolicy
+
+
+def _setup(arch, seed=0):
+    cfg = reduced_config(get_config(arch))
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n=6, n_ctx=2, ctx_len=64, prompt_len=8, new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    ctxs = [list(map(int, rng.integers(0, cfg.vocab, ctx_len))) for _ in range(n_ctx)]
+    out = []
+    for i in range(n):
+        out.append(
+            dict(
+                req_id=i,
+                context_tokens=ctxs[i % n_ctx],
+                prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, prompt_len))),
+                max_new_tokens=new,
+                arrival_s=i * 0.01,
+                expected_reuses=n // n_ctx,
+            )
+        )
+    return out
+
+
+def _run(cfg, params, reqs, **ec_kw):
+    kw = dict(max_slots=2, max_len=128, chunk_tokens=16)
+    kw.update(ec_kw)
+    ec = EngineConfig(**kw)
+    eng = ServingEngine(cfg, params, engine_cfg=ec)
+    for r in reqs:
+        eng.submit(Request(**r))
+    summary = eng.run()
+    tokens = {rec.req_id: rec.tokens for rec in eng.records}
+    actions = {rec.req_id: rec.action for rec in eng.records}
+    return eng, summary, tokens, actions
+
+
+@pytest.mark.parametrize(
+    "arch", ["llama-7b", "qwen2-1.5b", "mixtral-8x22b", "mamba2-1.3b",
+             "jamba-1.5-large-398b", "olmoe-1b-7b", "granite-34b"]
+)
+def test_reuse_tokens_identical_to_recompute(arch):
+    """The core property: loading stored context state produces token-for-token
+    identical generations vs full recomputation."""
+    cfg, params = _setup(arch)
+    reqs = _requests(cfg)
+    _, s_yes, toks_yes, acts = _run(cfg, params, reqs, policy_mode="always")
+    _, s_no, toks_no, _ = _run(cfg, params, reqs, reuse_enabled=False)
+    assert toks_yes == toks_no
+    assert sum(1 for a in acts.values() if a == "load") >= len(reqs) - 2
+    assert s_yes.reuse_hits >= len(reqs) - 2
+
+
+def test_partial_prefix_reuse_dense():
+    """Two contexts sharing a 32-token prefix: the second request partially
+    reuses the first's stored KV and still matches recompute exactly."""
+    cfg, params = _setup("llama-7b")
+    rng = np.random.default_rng(3)
+    shared = list(map(int, rng.integers(0, cfg.vocab, 32)))
+    ctx_a = shared + list(map(int, rng.integers(0, cfg.vocab, 16)))
+    ctx_b = shared + list(map(int, rng.integers(0, cfg.vocab, 16)))
+    prompt = list(map(int, rng.integers(0, cfg.vocab, 8)))
+    reqs = [
+        dict(req_id=0, context_tokens=ctx_a, prompt_tokens=prompt, max_new_tokens=3,
+             arrival_s=0.0, expected_reuses=2),
+        dict(req_id=1, context_tokens=ctx_b, prompt_tokens=prompt, max_new_tokens=3,
+             arrival_s=0.01, expected_reuses=2),
+    ]
+    _, _, toks_yes, acts = _run(cfg, params, reqs, policy_mode="always")
+    _, _, toks_no, _ = _run(cfg, params, reqs, reuse_enabled=False)
+    assert acts[1] == "partial"
+    assert toks_yes == toks_no
+
+
+def test_partial_reuse_disallowed_for_ssm():
+    """SSM context state is all-or-nothing (DESIGN.md §6): a shared prefix
+    must NOT produce a partial load for mamba2."""
+    cfg, params = _setup("mamba2-1.3b")
+    rng = np.random.default_rng(4)
+    shared = list(map(int, rng.integers(0, cfg.vocab, 32)))
+    ctx_a = shared + list(map(int, rng.integers(0, cfg.vocab, 16)))
+    ctx_b = shared + list(map(int, rng.integers(0, cfg.vocab, 16)))
+    prompt = [1, 2, 3, 4]
+    reqs = [
+        dict(req_id=0, context_tokens=ctx_a, prompt_tokens=prompt, max_new_tokens=2,
+             arrival_s=0.0, expected_reuses=2),
+        dict(req_id=1, context_tokens=ctx_b, prompt_tokens=prompt, max_new_tokens=2,
+             arrival_s=0.01, expected_reuses=2),
+    ]
+    _, _, toks_yes, acts = _run(cfg, params, reqs, policy_mode="always")
+    _, _, toks_no, _ = _run(cfg, params, reqs, reuse_enabled=False)
+    assert acts[1] == "recompute"
+    assert toks_yes == toks_no
+
+
+def test_compressed_tier_close_but_cheaper():
+    """int8 storage tier: generations may differ slightly (lossy) but the
+    engine runs and the stored bytes shrink ~2x."""
+    cfg, params = _setup("llama-7b")
+    reqs = _requests(cfg, n=4, n_ctx=1)
+    eng, s, toks, acts = _run(cfg, params, reqs, policy_mode="always",
+                              compress_tier="io2")
+    assert s.reuse_hits >= 2
+    e = next(iter(eng.store.entries.values()))
+    assert e.compressed
+
+
+def test_whisper_cross_kv_reuse():
+    """Enc-dec: reusing the stored encoder/cross-KV state skips re-encoding
+    and matches the recompute pipeline's generations."""
+    cfg, params = _setup("whisper-tiny")
+    rng = np.random.default_rng(5)
+    frames = jnp.asarray(rng.standard_normal((1, 32, cfg.d_model)), jnp.float32)
+    ctx_proxy = list(map(int, rng.integers(0, 1000, 32)))  # audio identity hash
+    prompt = list(map(int, rng.integers(0, cfg.vocab, 8)))
+    reqs = [
+        dict(req_id=i, context_tokens=ctx_proxy, prompt_tokens=prompt,
+             max_new_tokens=3, arrival_s=i * 0.01, expected_reuses=3, embeds=frames)
+        for i in range(3)
+    ]
+    _, _, toks_yes, acts = _run(cfg, params, reqs, policy_mode="always")
+    _, _, toks_no, _ = _run(cfg, params, reqs, reuse_enabled=False)
+    assert toks_yes == toks_no
+    assert list(acts.values()).count("load") == 2
+
+
+def test_vlm_image_context_reuse():
+    cfg, params = _setup("internvl2-1b")
+    rng = np.random.default_rng(6)
+    ft = cfg.frontend_tokens
+    embeds = jnp.asarray(rng.standard_normal((1, ft, cfg.d_model)) * 0.02, jnp.float32)
+    ctx_proxy = list(map(int, rng.integers(0, 1000, ft)))
+    reqs = [
+        dict(req_id=i, context_tokens=ctx_proxy,
+             prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, 8))),
+             max_new_tokens=3, arrival_s=i * 0.01, expected_reuses=3, embeds=embeds)
+        for i in range(3)
+    ]
+    # chunk must not exceed the (reduced) 8-token image-context proxy
+    _, _, toks_yes, acts = _run(cfg, params, reqs, policy_mode="always", chunk_tokens=8)
+    _, _, toks_no, _ = _run(cfg, params, reqs, reuse_enabled=False, chunk_tokens=8)
+    assert toks_yes == toks_no
+    assert list(acts.values()).count("load") == 2
+
+
+def test_cost_policy_skips_worthless_contexts():
+    """With the honest cost policy and a tiny model, storing tiny contexts
+    never clears break-even => engine recomputes (the paper's economics)."""
+    cfg, params = _setup("llama-7b")
+    reqs = _requests(cfg, n=4, n_ctx=1)
+    for r in reqs:
+        r["expected_reuses"] = 1.0
+    _, s, _, acts = _run(cfg, params, reqs, policy_mode="cost")
+    assert all(a == "recompute" for a in acts.values())
+    assert s.storage_cost == 0.0
+
+
+def test_hedged_load_caps_tail():
+    h = HedgePolicy(threshold_s=0.5, parallelism=2)
+    assert h.effective_delay(0.3) == 0.3
+    assert h.effective_delay(2.5) == pytest.approx(0.5 + 2.0 / 2)
+
+
+def test_prefetch_lookahead_reduces_ttft():
+    """Queued requests' stored contexts are fetched during earlier requests'
+    service: their TTFT drops to the unfinished remainder, tokens unchanged."""
+    from repro.core.perf_model import PerfModel, V100_X4_HF
+    from repro.core.pricing import AWS_PAPER
+
+    cfg, params = _setup("llama-7b")
+    reqs = _requests(cfg, n=8, n_ctx=2, ctx_len=64)
+
+    def run(prefetch):
+        ec = EngineConfig(
+            max_slots=1, max_len=128, chunk_tokens=16, policy_mode="always",
+            cost_arch="llama-7b", prefetch_lookahead=prefetch,
+        )
+        eng = ServingEngine(cfg, params, engine_cfg=ec,
+                            pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF))
+        for r in reqs:
+            eng.submit(Request(**r))
+        s = eng.run()
+        return s, {rec.req_id: rec.tokens for rec in eng.records}
+
+    s_plain, t_plain = run(0)
+    s_pre, t_pre = run(4)
+    assert t_plain == t_pre
+    assert s_pre.mean_ttft_s < s_plain.mean_ttft_s
+    assert s_pre.reuse_hits == s_plain.reuse_hits >= 6
+
+
+def test_admission_queue_edf():
+    q = AdmissionQueue()
+    q.push(Request(req_id=0, context_tokens=[], prompt_tokens=[1], max_new_tokens=1,
+                   arrival_s=0.0, slo_ttft_s=10.0))
+    q.push(Request(req_id=1, context_tokens=[], prompt_tokens=[1], max_new_tokens=1,
+                   arrival_s=0.1, slo_ttft_s=0.2))  # tighter deadline
+    q.push(Request(req_id=2, context_tokens=[], prompt_tokens=[1], max_new_tokens=1,
+                   arrival_s=5.0, slo_ttft_s=0.01))  # not arrived yet
+    first = q.pop_admissible(now=1.0)
+    assert first.req_id == 1  # EDF among arrived
+    assert q.pop_admissible(now=1.0).req_id == 0
+    assert q.pop_admissible(now=1.0) is None  # req 2 hasn't arrived
+    assert q.next_arrival() == 5.0

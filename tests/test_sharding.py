@@ -1,0 +1,102 @@
+"""Sharding rules: every spec must be structurally legal for the production
+mesh (sharded dims divisible by axis sizes) for all 11 configs, full size."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import CONFIGS, get_config
+from repro.configs.base import SHAPES, cell_is_runnable
+from repro.configs.shapes import input_specs
+from repro.distributed import sharding as sh
+from repro.models import registry
+
+
+class FakeMesh:
+    """Axis metadata stand-in (spec construction needs sizes, not devices)."""
+
+    def __init__(self, multi_pod=False):
+        self.axis_names = ("pod", "data", "model") if multi_pod else ("data", "model")
+        self.shape = (
+            {"pod": 2, "data": 16, "model": 16}
+            if multi_pod
+            else {"data": 16, "model": 16}
+        )
+
+
+def _axis_sizes(mesh, name_or_tuple):
+    if name_or_tuple is None:
+        return 1
+    names = name_or_tuple if isinstance(name_or_tuple, tuple) else (name_or_tuple,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def _assert_legal(spec_tree, shape_tree, mesh):
+    def check(spec, leaf):
+        assert isinstance(spec, P)
+        assert len(spec) <= len(leaf.shape), (spec, leaf.shape)
+        for axis_name, dim in zip(spec, leaf.shape):
+            if axis_name is None:
+                continue
+            n = _axis_sizes(mesh, axis_name)
+            assert dim % n == 0, f"dim {dim} not divisible by {axis_name}={n}"
+
+    jax.tree_util.tree_map(
+        check, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+@pytest.mark.parametrize("arch", sorted(CONFIGS))
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_legal_full_size(arch, multi_pod):
+    cfg = get_config(arch)
+    api = registry.get_model(cfg)
+    pspec = jax.eval_shape(
+        lambda k: api.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    mesh = FakeMesh(multi_pod)
+    specs = sh.param_specs(cfg, pspec, mesh)
+    _assert_legal(specs, pspec, mesh)
+
+
+@pytest.mark.parametrize("arch", sorted(CONFIGS))
+def test_big_tensors_are_sharded(arch):
+    """No parameter tensor above 64 MB (bf16) may be fully replicated on the
+    256-chip mesh — that's how we know TP/FSDP rules actually fire."""
+    cfg = get_config(arch)
+    api = registry.get_model(cfg)
+    pspec = jax.eval_shape(
+        lambda k: api.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    mesh = FakeMesh()
+    specs = sh.param_specs(cfg, pspec, mesh)
+
+    def check(spec, leaf):
+        import numpy as np
+
+        nbytes = int(np.prod(leaf.shape)) * 2
+        if nbytes > 64 * 2**20:
+            assert any(a is not None for a in spec), (
+                f"{arch}: {leaf.shape} ({nbytes/2**20:.0f} MB) replicated"
+            )
+
+    jax.tree_util.tree_map(
+        check, specs, pspec, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+@pytest.mark.parametrize("arch", sorted(set(CONFIGS) - {"llama-7b"}))
+@pytest.mark.parametrize("shape_name", sorted(SHAPES))
+def test_state_and_data_specs_legal(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, _ = cell_is_runnable(cfg, shape)
+    if not ok:
+        pytest.skip("documented long_500k skip")
+    cell = input_specs(cfg, shape)
+    mesh = FakeMesh(multi_pod=True)
+    specs = sh.data_specs(cfg, cell.batch, shape.global_batch, mesh)
+    _assert_legal(specs, cell.batch, mesh)

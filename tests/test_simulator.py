@@ -1,0 +1,86 @@
+"""Discrete-event simulator vs the closed-form model, + Fig-2 trend checks."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import Workload, cost_kv, cost_text
+from repro.core.perf_model import PerfModel, V100_X4_HF
+from repro.core.pricing import AWS_PAPER
+from repro.core import simulator
+
+LLAMA = get_config("llama-7b")
+PM = PerfModel(V100_X4_HF)
+
+
+def _trace(L_ctx, L_out=32, n_contexts=10, reuses=5, rate=0.05, seed=0):
+    return simulator.make_trace(
+        n_contexts=n_contexts, reuses_per_context=reuses, L_context=L_ctx,
+        L_prompt=32, L_output=L_out, arrival_rate_per_s=rate, seed=seed,
+    )
+
+
+def test_simulator_matches_analytic_costs():
+    """Light load (no queueing): simulated GPU cost must track the analytic
+    model within 10% for both pipelines."""
+    trace = _trace(8_000, rate=0.01)
+    tier = AWS_PAPER.tier("io2")
+    text = simulator.simulate(LLAMA, trace, PM, reuse_kv=False, tier=tier)
+    kv = simulator.simulate(LLAMA, trace, PM, reuse_kv=True, tier=tier)
+
+    w = Workload(L_context=8_000, L_prompt=32, L_output=32, N=5,
+                 period_hours=text.horizon_s / 3600.0)
+    ct = cost_text(LLAMA, w, AWS_PAPER, PM).total * 10  # 10 contexts
+    ck_compute = cost_kv(LLAMA, w, AWS_PAPER, PM).compute * 10
+    assert text.cost(AWS_PAPER, tier) == pytest.approx(ct, rel=0.1)
+    c_gpu = AWS_PAPER.compute.cost_per_hour / 3600
+    assert c_gpu * kv.gpu_busy_s == pytest.approx(ck_compute, rel=0.15)
+
+
+def test_fig2a_trend_savings_grow_with_input_length():
+    """Paper Fig 2(a): both savings increase with context length; bands
+    overlap the paper's 1.1-2.9x delay / 1.3-3.6x cost at the endpoints."""
+    res = {}
+    for L in (1_000, 10_000):
+        m = simulator.compare_pipelines(LLAMA, _trace(L), PM, AWS_PAPER)
+        res[L] = m
+    assert res[10_000]["cost_saving_x"] > res[1_000]["cost_saving_x"]
+    assert res[10_000]["delay_saving_x"] > res[1_000]["delay_saving_x"]
+    assert 1.0 <= res[1_000]["delay_saving_x"] <= 2.0  # paper: 1.1x at 1K
+    assert res[10_000]["delay_saving_x"] >= 2.0  # paper: 2.9x at 10K
+
+
+def test_fig2b_trend_savings_shrink_with_output_length():
+    """Paper Fig 2(b): longer outputs amortise the prefill saving away."""
+    short = simulator.compare_pipelines(LLAMA, _trace(10_000, L_out=1), PM, AWS_PAPER)
+    long_ = simulator.compare_pipelines(LLAMA, _trace(10_000, L_out=100), PM, AWS_PAPER)
+    assert short["delay_saving_x"] > long_["delay_saving_x"]
+    assert short["cost_saving_x"] > long_["cost_saving_x"]
+
+
+def test_reuse_never_recomputes_contexts_twice():
+    trace = _trace(4_000)
+    kv = simulator.simulate(
+        LLAMA, trace, PM, reuse_kv=True, tier=AWS_PAPER.tier("io2")
+    )
+    n_ctx = len({r.context_id for r in trace})
+    assert sum(1 for r in kv.results if not r.reused) == n_ctx
+
+
+def test_host_cache_reduces_load_delay():
+    trace = _trace(8_000)
+    tier = AWS_PAPER.tier("io2")
+    cold = simulator.simulate(LLAMA, trace, PM, reuse_kv=True, tier=tier)
+    warm = simulator.simulate(
+        LLAMA, trace, PM, reuse_kv=True, tier=tier, host_cache_gb=10_000.0
+    )
+    assert warm.mean_ttft_s < cold.mean_ttft_s
+
+
+def test_overlap_load_improves_ttft():
+    trace = _trace(8_000)
+    tier = AWS_PAPER.tier("io2")
+    plain = simulator.simulate(LLAMA, trace, PM, reuse_kv=True, tier=tier)
+    ovl = simulator.simulate(
+        LLAMA, trace, PM, reuse_kv=True, tier=tier, overlap_load=True
+    )
+    assert ovl.mean_ttft_s <= plain.mean_ttft_s

@@ -1,0 +1,117 @@
+"""End-to-end behaviour tests for the paper's system: economics + serving +
+storage acting together (the poster's headline claims, in miniature)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.perf_model import PerfModel, V100_X4_HF
+from repro.core.pricing import AWS_PAPER
+from repro.data.synthetic import WorkloadSpec, serving_workload
+from repro.models import registry
+from repro.serving import EngineConfig, Request, ServingEngine
+
+
+def _engine(cfg, params, **kw):
+    return ServingEngine(
+        cfg, params,
+        engine_cfg=EngineConfig(max_slots=2, max_len=160, chunk_tokens=16, **kw),
+        pricing=AWS_PAPER,
+        perf=PerfModel(V100_X4_HF),
+    )
+
+
+@pytest.fixture(scope="module")
+def llama_small():
+    cfg = reduced_config(get_config("llama-7b"))
+    api = registry.get_model(cfg)
+    return cfg, api.init(jax.random.PRNGKey(0), cfg)
+
+
+def test_paper_headline_reuse_saves_cost_and_delay(llama_small):
+    """With the paper's workload shape (long shared contexts, short prompts
+    and outputs, reused 5x) the reuse pipeline must win on BOTH axes —
+    the poster's central claim — while generating identical tokens.
+
+    Economics-at-scale: compute runs the reduced llama, times/costs are
+    modeled for the FULL llama-7b (EngineConfig.cost_arch) — exactly the
+    regime the paper measures (a 96-token reduced context stands in for the
+    paper's 10K-token one; cost_arch scales the $ and delays)."""
+    cfg, params = llama_small
+    spec = WorkloadSpec(
+        n_contexts=3, reuses_per_context=4, context_len=96, prompt_len=16,
+        output_len=4, arrival_rate_per_s=100.0, seed=0,
+    )
+    reqs = serving_workload(cfg, spec)
+
+    def run(**kw):
+        eng = _engine(cfg, params, cost_arch="llama-7b", **kw)
+        for r in reqs:
+            eng.submit(r)
+        s = eng.run()
+        return eng, s, {rec.req_id: rec.tokens for rec in eng.records}
+
+    _, s_kv, toks_kv = run(policy_mode="always")
+    _, s_txt, toks_txt = run(reuse_enabled=False)
+
+    assert toks_kv == toks_txt, "reuse changed generations"
+    assert s_kv.total_cost < s_txt.total_cost, (s_kv.total_cost, s_txt.total_cost)
+    assert s_kv.mean_ttft_s < s_txt.mean_ttft_s
+    # paper insight: storage is a minimal portion of total cost
+    assert s_kv.storage_cost < 0.2 * s_kv.total_cost
+
+
+def test_cross_request_prefix_sharing(llama_small):
+    """Requests whose contexts share chunk-aligned prefixes benefit without
+    exact context equality (beyond-paper partial reuse)."""
+    cfg, params = llama_small
+    rng = np.random.default_rng(1)
+    base = list(map(int, rng.integers(0, cfg.vocab, 64)))
+    eng = _engine(cfg, params, policy_mode="always")
+    for i in range(3):
+        ctx = base[:48] + list(map(int, rng.integers(0, cfg.vocab, 16)))
+        eng.submit(Request(req_id=i, context_tokens=ctx,
+                           prompt_tokens=[5, 6, 7, 8], max_new_tokens=2,
+                           arrival_s=i * 0.01, expected_reuses=3))
+    eng.run()
+    actions = [r.action for r in sorted(eng.records, key=lambda r: r.req_id)]
+    assert actions[0] == "recompute"
+    assert all(a == "partial" for a in actions[1:])
+    assert all(r.matched_tokens == 48 for r in eng.records if r.action == "partial")
+
+
+def test_storage_pressure_degrades_gracefully(llama_small):
+    """A store too small for every context keeps serving correctly (evicts,
+    recomputes) — no crashes, no wrong tokens."""
+    cfg, params = llama_small
+    rng = np.random.default_rng(2)
+    reqs = []
+    for i in range(6):
+        ctx = list(map(int, rng.integers(0, cfg.vocab, 64)))
+        reqs.append(Request(req_id=i, context_tokens=ctx, prompt_tokens=[1, 2, 3, 4],
+                            max_new_tokens=2, arrival_s=i * 0.01, expected_reuses=2))
+    eng = _engine(cfg, params, policy_mode="always",
+                  tier_capacities_gb={"io2": 100e3 / 1e9})  # ~2 contexts worth
+    for r in reqs:
+        eng.submit(r)
+    s = eng.run()
+    assert s.n_requests == 6
+    assert eng.store.evictions > 0 or eng.store.rejected_puts > 0
+
+
+def test_slo_aware_policy_prefers_fast_path(llama_small):
+    """With an SLO tighter than the storage load delay, the cost policy must
+    fall back to a feasible option rather than violating TTFT."""
+    cfg, params = llama_small
+    from repro.core import policy as pol
+    from repro.core.cost_model import Workload
+
+    w = Workload(L_context=10_000, L_prompt=32, L_output=32, N=5, slo_ttft_s=0.5)
+    pm = PerfModel(V100_X4_HF)
+    d = pol.decide(cfg, w, AWS_PAPER, pm, available={"s3": 1.0})
+    # s3 load of ~5 GB takes >> 0.5 s; recompute takes ~7 s; neither is
+    # feasible -> degrade to cheapest, but the decision must be explicit
+    assert d.action in ("recompute", "load")
+    d2 = pol.decide(cfg, w, AWS_PAPER, pm, available={"host_dram": 1.0})
+    assert d2.action == "load"  # PCIe-speed tier satisfies the SLO

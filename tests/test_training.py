@@ -1,0 +1,117 @@
+"""Training substrate: optimization works, accumulation is exact, compressed
+gradient sync is bounded, ZeRO specs are legal."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.data.synthetic import token_batches
+from repro.models import registry
+from repro.training.compression import compressed_pmean
+from repro.training.optimizer import AdamW, cosine_schedule, opt_specs
+from repro.training.train_step import make_grad_accum_step, make_train_step
+
+
+def test_loss_decreases_on_learnable_data():
+    cfg = reduced_config(get_config("qwen2-0.5b"), n_layers=2, vocab=128)
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=5e-3, schedule=cosine_schedule(5, 80))
+    step = jax.jit(make_train_step(cfg, opt))
+    opt_state = opt.init(params)
+    it = token_batches(cfg, batch=8, seq_len=32, seed=0)
+    losses = []
+    for _ in range(40):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    # clear optimization signal: mean of last 5 well below first 5
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses[::10]
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = reduced_config(get_config("llama-7b"), n_layers=2, vocab=64)
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=1e-3, grad_clip=None)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, 64, (8, 16)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, 64, (8, 16)), jnp.int32),
+        "mask": jnp.ones((8, 16), jnp.float32),
+    }
+    p1, _, m1 = jax.jit(make_train_step(cfg, opt))(params, opt.init(params), batch)
+    p2, _, m2 = jax.jit(make_grad_accum_step(cfg, opt, accum=4))(
+        params, opt.init(params), batch
+    )
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_compressed_pmean_error_bound():
+    """Int8 gradient all-reduce: |err| <= scale (quantisation of each of the
+    participants), scale = max|g|/127."""
+    devs = jax.devices()
+    if len(devs) < 1:
+        pytest.skip("no devices")
+    # single-device axis: the compression round-trip itself must be tight
+    mesh = jax.make_mesh((1,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    g = jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)), jnp.float32)
+    with mesh:
+        out = shard_map(
+            lambda x: compressed_pmean(x, "pod"),
+            mesh=mesh, in_specs=P(), out_specs=P(), check_rep=False,
+        )(g)
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(out - g))) <= scale + 1e-6
+
+
+def test_opt_specs_add_zero1_sharding():
+    """For pure-DP archs, moments gain a data-axis dim; specs stay legal
+    (every sharded dim divisible by the axis)."""
+    import os
+    cfg = get_config("qwen2-1.5b")  # dp arch, full size
+    from repro.distributed import sharding as sh
+    from repro.models import registry as reg
+
+    # abstract mesh is enough for spec construction
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # emulate the production mesh's axis sizes for divisibility checks via a
+    # fake object exposing .shape/.axis_names
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    api = reg.get_model(cfg)
+    pspec = jax.eval_shape(lambda k: api.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = sh.param_specs(cfg, pspec, FakeMesh())
+    ospecs = opt_specs(specs, pspec, FakeMesh())
+
+    def check(spec, leaf):
+        for name, dim in zip(spec, leaf.shape):
+            if name == "data":
+                assert dim % 16 == 0
+            if name == "model":
+                assert dim % 16 == 0
+
+    jax.tree_util.tree_map(
+        check, ospecs.m, pspec,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+    # at least some moments got ZeRO-sharded
+    n_sharded = sum(
+        1
+        for s in jax.tree_util.tree_leaves(
+            ospecs.m, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+        if "data" in s
+    )
+    assert n_sharded > 0
