@@ -18,18 +18,21 @@ from repro.core.perf_model import PerfModel, V100_X4_HF
 from repro.core.pricing import AWS_PAPER
 from repro.data.synthetic import WorkloadSpec, serving_workload
 from repro.models import registry
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import AlwaysReusePlanner, EngineConfig, Request, ServingEngine
 from repro.serving.scheduler import HedgePolicy
 
+# config name -> EngineConfig kwargs; every reuse row plans with the
+# unconditional-reuse planner so the ablation isolates the execute-side
+# features (tiers, overlap, hedging, prefetch), not the policy.
 CONFIGS: Dict[str, dict] = {
     "recompute": dict(reuse_enabled=False),
-    "paper": dict(policy_mode="always"),
-    "paper+int8": dict(policy_mode="always", compress_tier="io2"),
-    "paper+overlap": dict(policy_mode="always", overlap_load=True),
-    "paper+hedge": dict(policy_mode="always", hedge=HedgePolicy(threshold_s=0.8)),
-    "paper+prefetch": dict(policy_mode="always", prefetch_lookahead=4),
+    "paper": dict(),
+    "paper+int8": dict(compress_tier="io2"),
+    "paper+overlap": dict(overlap_load=True),
+    "paper+hedge": dict(hedge=HedgePolicy(threshold_s=0.8)),
+    "paper+prefetch": dict(prefetch_lookahead=4),
     "beyond(all)": dict(
-        policy_mode="always", compress_tier="io2", overlap_load=True,
+        compress_tier="io2", overlap_load=True,
         hedge=HedgePolicy(threshold_s=0.8), prefetch_lookahead=4,
     ),
 }
@@ -58,6 +61,7 @@ def sweep(n_requests: int = 18, n_contexts: int = 3, seed: int = 0) -> List[dict
                 max_slots=2, max_len=256, chunk_tokens=16,
                 cost_arch="llama-7b", **kw,
             ),
+            planner=AlwaysReusePlanner(),
             pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF),
         )
         for r in reqs:

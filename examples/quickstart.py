@@ -14,7 +14,7 @@ from repro.configs import get_config, reduced_config
 from repro.core.perf_model import PerfModel, V100_X4_HF
 from repro.core.pricing import AWS_PAPER
 from repro.models import registry
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import AlwaysReusePlanner, EngineConfig, Request, ServingEngine
 
 
 def main():
@@ -41,9 +41,10 @@ def main():
             cfg, params,
             engine_cfg=EngineConfig(
                 max_slots=2, max_len=160, chunk_tokens=16,
-                reuse_enabled=reuse, policy_mode="always",
+                reuse_enabled=reuse,
                 cost_arch="llama-7b",  # model $ and delays at paper scale
             ),
+            planner=AlwaysReusePlanner(),  # the paper's Fig-2 pipeline
             pricing=AWS_PAPER,
             perf=PerfModel(V100_X4_HF),
         )

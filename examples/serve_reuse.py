@@ -22,7 +22,7 @@ from repro.core.perf_model import PerfModel, V100_X4_HF
 from repro.core.pricing import AWS_PAPER
 from repro.data.synthetic import WorkloadSpec, serving_workload
 from repro.models import registry
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import CostAwarePlanner, EngineConfig, Request, ServingEngine
 from repro.serving.scheduler import HedgePolicy
 
 
@@ -31,17 +31,18 @@ def build_engine(cfg, params, mode: str, cost_arch: str):
     if mode == "recompute":
         ec = EngineConfig(reuse_enabled=False, **common)
     elif mode == "paper":
-        ec = EngineConfig(policy_mode="cost", **common)
+        ec = EngineConfig(**common)
     elif mode == "beyond":
         ec = EngineConfig(
-            policy_mode="cost", compress_tier="io2", overlap_load=True,
+            compress_tier="io2", overlap_load=True,
             hedge=HedgePolicy(threshold_s=0.8, parallelism=2),
             prefetch_lookahead=4, **common,
         )
     else:
         raise ValueError(mode)
     return ServingEngine(
-        cfg, params, engine_cfg=ec, pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF)
+        cfg, params, engine_cfg=ec, planner=CostAwarePlanner(),
+        pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF),
     )
 
 

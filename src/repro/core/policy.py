@@ -11,6 +11,12 @@ evaluates, via the analytical model, every option available for its context —
 
 and picks the cheapest that satisfies the TTFT SLO.  Write-back is decided by
 the break-even rule (store iff expected reuses make C_KV < C_text).
+
+This module is the *analytical* layer: pure functions of (arch, workload,
+pricing, perf).  The serving-side wrapper that turns a Decision into an
+executable per-request ``ReusePlan`` lives in ``repro.serving.planner``
+(``CostAwarePlanner`` binds ``decide`` + ``should_store``; planner variants
+swap this policy without touching the engine).
 """
 from __future__ import annotations
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -130,7 +130,9 @@ def simulate(
     reuse_kv=True  — store each context's KV on first use, load thereafter.
     ``host_cache_gb`` > 0 adds a beyond-paper host-DRAM LRU cache in front of
     the storage tier (hits load at PCIe speed)."""
-    stored_at: Dict[int, float] = {}  # context_id -> store time
+    # context_id -> (store time, stored bytes); bytes recorded at store time
+    # so wrap-up GB-hour accounting is O(contexts), not O(contexts x trace).
+    stored_at: Dict[int, Tuple[float, float]] = {}
     host_cache: Dict[int, float] = {}  # context_id -> last-use (LRU)
     host_cache_bytes = 0.0
 
@@ -151,7 +153,7 @@ def simulate(
             # first use: full prefill, then store (async write; charged to
             # the link, not the GPU).
             prefill_s = perf.t_prefill(cfg, req.L_context + req.L_prompt)
-            stored_at[req.context_id] = start + prefill_s
+            stored_at[req.context_id] = (start + prefill_s, s_bytes)
             transferred += s_bytes
         else:
             reused = True
@@ -197,11 +199,7 @@ def simulate(
 
     horizon = max((r.finish_s for r in results), default=0.0)
     storage_gb_hours = sum(
-        (horizon - t0) / 3600.0
-        * s_storage_bytes(cfg, req_L, compression=compression)
-        / GB
-        for cid, t0 in stored_at.items()
-        for req_L in [next(r.L_context for r in trace if r.context_id == cid)]
+        (horizon - t0) / 3600.0 * nbytes / GB for t0, nbytes in stored_at.values()
     )
     return SimResult(
         results=results,

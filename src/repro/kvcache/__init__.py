@@ -1,2 +1,9 @@
 """Tiered, content-addressed KV/context-state cache (the paper's storage half)."""
-from repro.kvcache import chunks, compression, paged, store, transfer  # noqa: F401
+from repro.kvcache import backend, chunks, compression, paged, store, transfer  # noqa: F401
+from repro.kvcache.backend import (  # noqa: F401
+    HostMemoryBackend,
+    ObjectStoreBackend,
+    StorageBackend,
+    default_backends,
+)
+from repro.kvcache.transfer import TransferHandle  # noqa: F401

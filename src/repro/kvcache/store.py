@@ -1,25 +1,30 @@
 """Tiered context-state store: HBM-adjacent host DRAM -> cloud storage.
 
-The storage half of the paper's system.  Entries are content-addressed by
-token chain hashes (``chunks.ChunkTrie``), live in exactly one tier, and are
-promoted/demoted/evicted by either LRU or a cost-aware score derived from the
-analytical model (evict the entry whose storage $ rate is least justified by
-its prefill-$ savings rate — the paper's economics turned into an eviction
-policy, a beyond-paper extension).
+The storage half of the paper's system, split along the plan/execute API:
+this module owns *what* is stored — tier metadata, the content-addressed
+chain-hash trie (``chunks.ChunkTrie``), capacity accounting, and the
+cost-aware eviction economics — while the bytes themselves live in pluggable
+``StorageBackend``s (``kvcache.backend``), one per tier.  Entries live in
+exactly one tier and are promoted/demoted/evicted by either LRU or a
+cost-aware score derived from the analytical model (evict the entry whose
+storage $ rate is least justified by its prefill-$ savings rate — the
+paper's economics turned into an eviction policy, a beyond-paper extension).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.pricing import GB, Pricing
 from repro.kvcache import compression
+from repro.kvcache.backend import StorageBackend, default_backends
 from repro.kvcache.chunks import ChunkTrie, PrefixMatch
 from repro.kvcache.transfer import SimClock, TransferModel
+
+# Storage rate assumed by eviction scoring when no Pricing is plumbed in
+# (io2's ~$0.125/GB-month); callers with real catalogs pass ``pricing=``.
+_FALLBACK_GB_HOUR_RATE = 1.7e-4
 
 
 @dataclasses.dataclass
@@ -27,7 +32,6 @@ class StoredEntry:
     entry_id: str
     chain: List[str]
     n_tokens: int
-    artifact: Any  # host pytree (possibly compressed)
     nbytes: int
     compressed: bool
     tier: str
@@ -60,6 +64,8 @@ class ContextStore:
         chunk_tokens: int = 256,
         compress_tier: Optional[str] = None,  # entries entering this tier are int8
         eviction: str = "cost",  # "cost" | "lru"
+        backends: Optional[Dict[str, StorageBackend]] = None,
+        pricing: Optional[Pricing] = None,
     ):
         self.tiers: Dict[str, TierState] = {
             n: TierState(n, gb * GB) for n, gb in tier_capacities_gb.items()
@@ -67,6 +73,12 @@ class ContextStore:
         self.tier_order = list(tier_capacities_gb)  # fastest first
         self.transfer = transfer
         self.clock = clock or SimClock()
+        self.backends: Dict[str, StorageBackend] = backends or default_backends(
+            self.tier_order, transfer=transfer, clock=self.clock
+        )
+        missing = set(self.tier_order) - set(self.backends)
+        assert not missing, f"tiers without a backend: {sorted(missing)}"
+        self.pricing = pricing
         self.trie = ChunkTrie(chunk_tokens)
         self.entries: Dict[str, StoredEntry] = {}
         self.compress_tier = compress_tier
@@ -132,7 +144,6 @@ class ContextStore:
             entry_id=entry_id,
             chain=chain,
             n_tokens=len(chain) * self.trie.chunk_tokens,
-            artifact=artifact,
             nbytes=nbytes,
             compressed=compressed,
             tier=tier,
@@ -142,10 +153,8 @@ class ContextStore:
         )
         self.entries[entry_id] = e
         ts.used_bytes += nbytes
-        delay = (
-            self.transfer.store_delay(nbytes, tier) if self.transfer is not None else 0.0
-        )
-        return entry_id, (delay if sync else 0.0)
+        handle = self.backends[tier].put(entry_id, artifact, nbytes)
+        return entry_id, (handle.delay_s if sync else 0.0)
 
     # ------------------------------------------------------------------ #
     # Read path
@@ -164,11 +173,14 @@ class ContextStore:
         e.uses += 1
         e.last_used_s = self.clock.now
         nbytes = e.nbytes * max(0.0, min(1.0, fraction))
-        delay = (
-            self.transfer.load_delay(nbytes, e.tier) if self.transfer is not None else 0.0
-        )
-        art = compression.decompress_tree(e.artifact) if e.compressed else e.artifact
-        return art, delay
+        payload, handle = self.backends[e.tier].get(entry_id, nbytes=nbytes)
+        art = compression.decompress_tree(payload) if e.compressed else payload
+        return art, handle.delay_s
+
+    def estimate_load_delay(self, tier: str, nbytes: float) -> float:
+        """Backend-modeled (hedged) read delay for ``nbytes`` from ``tier``,
+        charging nothing — the prefetch/economics planning surface."""
+        return self.backends[tier].estimate_load_delay(nbytes)
 
     # ------------------------------------------------------------------ #
     # Tier movement / eviction
@@ -181,14 +193,23 @@ class ContextStore:
         if dst.used_bytes + e.nbytes > dst.capacity_bytes:
             return False
         self._accrue()
+        payload = self.backends[e.tier].peek(entry_id)
+        self.backends[e.tier].delete(entry_id)
         self.tiers[e.tier].used_bytes -= e.nbytes
         if to_tier == self.compress_tier and not e.compressed:
-            e.artifact = compression.compress_tree(e.artifact)
+            payload = compression.compress_tree(payload)
             e.compressed = True
-            e.nbytes = compression.tree_nbytes(e.artifact)
+            e.nbytes = compression.tree_nbytes(payload)
         e.tier = to_tier
         dst.used_bytes += e.nbytes
+        # tier migration, not a serving write: bytes move uncharged
+        self.backends[to_tier].put(entry_id, payload, e.nbytes, charge=False)
         return True
+
+    def _gb_hour_rate(self, tier: str) -> float:
+        if self.pricing is not None and tier in self.pricing.tiers:
+            return self.pricing.tier(tier).cost_per_gb_hour
+        return _FALLBACK_GB_HOUR_RATE
 
     def _score(self, e: StoredEntry, pricing_rate: float) -> float:
         """Cost-aware eviction score (higher = keep): $ saved per hour by this
@@ -204,9 +225,11 @@ class ContextStore:
         cands = [e for e in self.entries.values() if e.tier == tier]
         if not cands:
             return False
-        victim = min(cands, key=lambda e: self._score(e, pricing_rate=1.7e-4))
+        rate = self._gb_hour_rate(tier)
+        victim = min(cands, key=lambda e: self._score(e, pricing_rate=rate))
         self.trie.remove(victim.chain, victim.entry_id)
         self.tiers[tier].used_bytes -= victim.nbytes
+        self.backends[tier].delete(victim.entry_id)
         del self.entries[victim.entry_id]
         self.evictions += 1
         return True

@@ -15,6 +15,27 @@ from repro.core.perf_model import PerfModel
 from repro.core.pricing import GB, Pricing
 
 
+@dataclasses.dataclass(frozen=True)
+class TransferHandle:
+    """One modeled byte movement against a storage tier.
+
+    ``issued_at_s``/``completes_at_s`` are SimClock times; the transfer is
+    logically in flight during that window (the data itself moves eagerly —
+    this container has no storage fabric, so only time is simulated).
+    """
+
+    key: str
+    tier: str
+    kind: str  # "load" | "store"
+    nbytes: float
+    delay_s: float
+    issued_at_s: float
+
+    @property
+    def completes_at_s(self) -> float:
+        return self.issued_at_s + self.delay_s
+
+
 class SimClock:
     def __init__(self, start: float = 0.0):
         self.now = float(start)
@@ -65,6 +86,11 @@ class TransferModel:
         s.store_events += 1
         s.store_time_s += t
         return t
+
+    def estimate_load_delay(self, nbytes: float, tier_name: str) -> float:
+        """Pure delay estimate — no bytes charged to the link stats (used by
+        prefetch planning and economics-at-scale overrides)."""
+        return self.perf.kv_load_time(nbytes, self.pricing.tier(tier_name))
 
     def transfer_fees(self) -> float:
         total = 0.0

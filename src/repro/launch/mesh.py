@@ -5,18 +5,25 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` across jax versions: ``axis_types``/``AxisType``
+    first appeared after 0.4.x — pass explicit Auto types when the running
+    jax has them (the default there anyway), and omit the kwarg otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 256 chips as (data=16, model=16).
     Multi-pod: 2 pods = 512 chips as (pod=2, data=16, model=16); the ``pod``
     axis is pure data-parallel (crosses DCI once per step)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over real local devices (tests / examples)."""
-    axes = ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), axes, axis_types=types)
+    return make_mesh_compat((data, model), ("data", "model"))

@@ -20,7 +20,12 @@ from repro.core.perf_model import PerfModel, V100_X4_HF, tpu_v5e
 from repro.core.pricing import AWS_PAPER, tpu_v5e_pod
 from repro.data.synthetic import WorkloadSpec, serving_workload
 from repro.models import registry
-from repro.serving import EngineConfig, ServingEngine
+from repro.serving import (
+    AlwaysReusePlanner,
+    CostAwarePlanner,
+    EngineConfig,
+    ServingEngine,
+)
 from repro.serving.scheduler import HedgePolicy
 
 
@@ -58,13 +63,15 @@ def main() -> None:
         max_len=args.context_len + args.prompt_len + args.output_len + 32,
         chunk_tokens=16,
         reuse_enabled=args.policy != "never",
-        policy_mode="cost" if args.policy == "never" else args.policy,
         compress_tier="io2" if args.compress else None,
         overlap_load=args.overlap,
         hedge=HedgePolicy() if args.hedge else None,
         cost_arch=args.arch if args.reduced else None,
     )
-    engine = ServingEngine(cfg, params, engine_cfg=ec, pricing=pricing, perf=perf)
+    planner = AlwaysReusePlanner() if args.policy == "always" else CostAwarePlanner()
+    engine = ServingEngine(
+        cfg, params, engine_cfg=ec, planner=planner, pricing=pricing, perf=perf
+    )
 
     spec = WorkloadSpec(
         n_contexts=args.contexts,

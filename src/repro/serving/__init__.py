@@ -1,3 +1,10 @@
-"""Continuous-batching serving engine with stored-KV-cache reuse."""
+"""Step-driven serving engine with stored-KV-cache reuse (plan/execute API)."""
 from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
+from repro.serving.planner import (  # noqa: F401
+    AlwaysReusePlanner,
+    CostAwarePlanner,
+    ReusePlan,
+    ReusePlanner,
+    StoreLookup,
+)
 from repro.serving.request import Request  # noqa: F401

@@ -1,37 +1,52 @@
-"""Continuous-batching serving engine with first-class stored-KV reuse.
+"""Continuous-batching serving engine, structured as plan -> execute.
 
 The paper's pipeline, end to end: on admission a request's context is looked
-up in the tiered ContextStore (chain-hash prefix match); the cost-model
-policy picks recompute / load / partial-load; loads insert stored state into
-the slot and only the unmatched tail + prompt is (suffix-)prefilled; decode
-runs batched across slots.  Write-back is break-even-gated.
+up in the tiered ContextStore (chain-hash prefix match); a pluggable
+``ReusePlanner`` turns (request, lookup, workload) into a declarative
+``ReusePlan`` (recompute / load / partial-load, + write-back); the engine
+*executes* the plan — storage fetch through the tier's ``StorageBackend``,
+(suffix-)prefill of the unmatched tail + prompt, break-even-gated write-back
+— and decode runs batched across slots.
+
+The engine is step-driven: ``submit()`` enqueues, ``step()`` performs one
+scheduling step (admit one request, or one batched decode step, or a clock
+jump to the next arrival) and returns the typed ``events`` it produced;
+``drain()`` iterates steps to completion; ``run()`` is the thin
+drain-then-summarize loop.  Traces, streaming callers, and the benchmarks
+all drive this one surface.
 
 Time/cost accounting: compute is real JAX execution with *modeled* durations
 (PerfModel — this container has no TPU), storage/network delays flow through
-TransferModel.  Numerics are real: reused-KV outputs are bit-comparable to
-recompute outputs (tests/test_serving.py asserts it).
+the backends' TransferModel.  Numerics are real: reused-KV outputs are
+bit-comparable to recompute outputs (tests/test_serving.py asserts it).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import policy as policy_mod
 from repro.core.cost_model import Workload, s_storage_bytes
 from repro.core.perf_model import PerfModel, tpu_v5e
-from repro.core.pricing import GB, Pricing, tpu_v5e_pod
+from repro.core.pricing import Pricing, tpu_v5e_pod
 from repro.kvcache import paged
+from repro.kvcache.backend import StorageBackend, default_backends
 from repro.kvcache.store import ContextStore
 from repro.kvcache.transfer import SimClock, TransferModel
 from repro.models import registry
+from repro.serving import events as ev
 from repro.serving import metrics as metrics_mod
-from repro.serving.request import Phase, Request, RequestRecord, Slot
+from repro.serving.planner import (
+    CostAwarePlanner,
+    ReusePlan,
+    ReusePlanner,
+    StoreLookup,
+)
+from repro.serving.request import Request, RequestRecord, Slot
 from repro.serving.scheduler import AdmissionQueue, HedgePolicy
 
 
@@ -41,11 +56,6 @@ class EngineConfig:
     max_len: int = 512
     chunk_tokens: int = 16
     reuse_enabled: bool = True
-    # "cost"   — the paper's policy: store/load iff the analytical model says
-    #            it pays (break-even gating).
-    # "always" — store & reuse unconditionally (correctness tests, and the
-    #            paper's own Fig-2 experiment which always reuses).
-    policy_mode: str = "cost"
     tier_capacities_gb: Dict[str, float] = dataclasses.field(
         default_factory=lambda: {"host_dram": 64.0, "io2": 1024.0}
     )
@@ -74,6 +84,8 @@ class ServingEngine:
         params: Any,
         *,
         engine_cfg: Optional[EngineConfig] = None,
+        planner: Optional[ReusePlanner] = None,
+        backends: Optional[Dict[str, StorageBackend]] = None,
         pricing: Optional[Pricing] = None,
         perf: Optional[PerfModel] = None,
     ):
@@ -92,6 +104,10 @@ class ServingEngine:
 
         self.clock = SimClock()
         self.transfer = TransferModel(self.perf, self.pricing)
+        self.backends = backends or default_backends(
+            self.ec.tier_capacities_gb,
+            transfer=self.transfer, clock=self.clock, hedge=self.ec.hedge,
+        )
         self.store = ContextStore(
             tier_capacities_gb=self.ec.tier_capacities_gb,
             transfer=self.transfer,
@@ -99,6 +115,16 @@ class ServingEngine:
             chunk_tokens=self.ec.chunk_tokens,
             compress_tier=self.ec.compress_tier,
             eviction=self.ec.eviction,
+            backends=self.backends,
+            pricing=self.pricing,
+        )
+        self.planner: ReusePlanner = planner or CostAwarePlanner()
+        self.planner.configure(
+            cost_cfg=self.cost_cfg,
+            pricing=self.pricing,
+            perf=self.perf,
+            write_back=self.ec.reuse_enabled and self.ec.store_write_back,
+            min_store_tokens=self.ec.chunk_tokens,
         )
         self.queue = AdmissionQueue()
         self.slots = [Slot(i) for i in range(self.ec.max_slots)]
@@ -126,23 +152,42 @@ class ServingEngine:
         return logits, new_state
 
     # ------------------------------------------------------------------ #
-    # Public API
+    # Public API: submit / step / drain / run
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
         self.queue.push(req)
 
+    @property
+    def idle(self) -> bool:
+        """Nothing queued and nothing decoding."""
+        return len(self.queue) == 0 and not any(s.active for s in self.slots)
+
+    def step(self) -> List[ev.Event]:
+        """Advance the engine by one scheduling step and return its events:
+        admit one request if a slot and an arrived request exist, else run one
+        batched decode step, else jump the clock to the next arrival."""
+        events: List[ev.Event] = []
+        if self._admit_one(events):
+            return events
+        if any(s.active for s in self.slots):
+            self._decode_step(events)
+            return events
+        nxt = self.queue.next_arrival()
+        if nxt is None:
+            return events  # fully drained
+        self.clock.at_least(nxt)
+        events.append(ev.ClockAdvanced(t_s=self.clock.now, req_id=-1, to_s=nxt))
+        return events
+
+    def drain(self) -> Iterator[ev.Event]:
+        """Iterate events until every submitted request has finished."""
+        while not self.idle:
+            yield from self.step()
+
     def run(self) -> metrics_mod.ServingSummary:
         """Serve everything submitted; returns the summary."""
-        while len(self.queue) or any(s.active for s in self.slots):
-            progressed = self._admit_one()
-            if progressed:
-                continue
-            if any(s.active for s in self.slots):
-                self._decode_step()
-                continue
-            nxt = self.queue.next_arrival()
-            assert nxt is not None
-            self.clock.at_least(nxt)
+        for _ in self.drain():
+            pass
         return self.summary()
 
     def summary(self) -> metrics_mod.ServingSummary:
@@ -153,7 +198,7 @@ class ServingEngine:
         )
 
     # ------------------------------------------------------------------ #
-    # Admission + prefill (the paper's reuse path)
+    # Admission: pop -> plan -> execute plan
     # ------------------------------------------------------------------ #
     def _free_slot(self) -> Optional[Slot]:
         for s in self.slots:
@@ -161,7 +206,7 @@ class ServingEngine:
                 return s
         return None
 
-    def _admit_one(self) -> bool:
+    def _admit_one(self, events: List[ev.Event]) -> bool:
         slot = self._free_slot()
         if slot is None:
             return False
@@ -176,143 +221,180 @@ class ServingEngine:
             prompt_len=len(req.prompt_tokens),
             start_s=self.clock.now,
         )
-
-        ctx, prompt = list(req.context_tokens), list(req.prompt_tokens)
-        total_len = len(ctx) + len(prompt) + req.max_new_tokens
+        total_len = len(req.context_tokens) + len(req.prompt_tokens) + req.max_new_tokens
         assert total_len <= self.ec.max_len, (total_len, self.ec.max_len)
-
-        # ---- policy: lookup stored state, decide ---------------------- #
-        match, entry = (
-            self.store.lookup(ctx) if self.ec.reuse_enabled else (None, None)
+        events.append(
+            ev.RequestAdmitted(
+                t_s=self.clock.now, req_id=req.req_id, slot=slot.index,
+                queue_s=rec.queue_s,
+            )
         )
-        partial_ok = paged.partial_reuse_allowed(self.cfg) and req.embeds is None
-        frac = 0.0
-        if entry is not None and match.matched_tokens > 0:
-            if match.matched_tokens >= len(ctx):
-                frac = 1.0
-            elif partial_ok:
-                frac = match.matched_tokens / len(ctx)
-        w = Workload(
-            L_context=len(ctx),
-            L_prompt=len(prompt),
+
+        lookup = self._lookup(req)
+        workload = Workload(
+            L_context=len(req.context_tokens),
+            L_prompt=len(req.prompt_tokens),
             L_output=req.max_new_tokens,
             N=max(int(req.expected_reuses), 1),
             slo_ttft_s=req.slo_ttft_s,
         )
-        available = {entry.tier: frac} if (entry is not None and frac > 0) else {}
-        if self.ec.policy_mode == "always" and available:
-            tier_name, f = next(iter(available.items()))
-            decision = policy_mod.Decision(
-                action="load" if f >= 1.0 else "partial",
-                tier=tier_name, reused_fraction=f, est_ttft_s=0.0, est_cost=0.0,
-            )
-        else:
-            decision = policy_mod.decide(
-                self.cost_cfg, w, self.pricing, self.perf, available=available
-            )
+        plan = self.planner.plan(req, lookup, workload)
+        events.append(ev.PlanChosen(t_s=self.clock.now, req_id=req.req_id, plan=plan))
 
-        temp = self.api.init_state(self.cfg, 1, self.ec.max_len)
-        load_s = 0.0
-        prefill_s = 0.0
-        matched = 0
-
-        if decision.loads_kv and entry is not None:
-            matched = (
-                len(ctx) if decision.action == "load" else match.matched_tokens
+        if plan.loads_kv and lookup.entry is not None:
+            load_s, prefill_s, logits, temp = self._execute_load(
+                req, plan, lookup, events
             )
-            artifact, delay = self.store.fetch(
-                entry.entry_id, fraction=matched / entry.n_tokens
-            )
-            if self.cost_cfg is not self.cfg:
-                # economics-at-scale: charge the FULL arch's KV bytes
-                nbytes = s_storage_bytes(
-                    self.cost_cfg, matched,
-                    compression=0.5 if self.ec.compress_tier == entry.tier else 1.0,
-                )
-                delay = self.perf.kv_load_time(nbytes, self.pricing.tier(entry.tier))
-            if self.ec.hedge is not None:
-                delay = self.ec.hedge.effective_delay(delay)
-            ready = self._prefetch_ready.pop(req.req_id, None)
-            if ready is not None:
-                # fetch was issued while earlier requests were being served:
-                # only the unfinished remainder delays this request.
-                delay = max(0.0, min(delay, ready - self.clock.now))
-            temp = paged.insert_slot(self.cfg, temp, 0, artifact, n_tokens=matched)
-            tail = [] if req.embeds is not None else ctx[matched:]
-            tokens = jnp.asarray([tail + prompt], jnp.int32)
-            logits, temp = self._jit_prefill(self.params, tokens, temp)
-            prefill_s = self.perf.t_prefill(self.cost_cfg, len(tail) + len(prompt))
-            if self.ec.overlap_load:
-                load_s = max(0.0, delay - prefill_s)
-            else:
-                load_s = delay
+            matched = plan.matched_tokens
         else:
-            # ---- recompute; store the context if break-even clears ----- #
-            store_it = (
-                self.ec.reuse_enabled
-                and self.ec.store_write_back
-                and entry is None
-                and len(ctx) >= self.ec.chunk_tokens
-                and (
-                    self.ec.policy_mode == "always"
-                    or policy_mod.should_store(
-                        self.cost_cfg, w, self.pricing, self.perf,
-                        expected_reuses=req.expected_reuses,
-                    )
-                )
-            )
-            saved = self._c_gpu_s * self.perf.t_prefill(self.cost_cfg, len(ctx))
-            if req.embeds is not None:
-                # VLM/audio context: the context IS the embeddings. Single
-                # phase — positions [0, ctx) of the state depend only on the
-                # embeds, so the artifact is extractable post-hoc.
-                tokens = jnp.asarray([prompt], jnp.int32)
-                logits, temp = self._jit_prefill(
-                    self.params, tokens, temp, embeds=req.embeds
-                )
-                if store_it:
-                    artifact = paged.extract_slot(self.cfg, temp, 0, len(ctx))
-                    self.store.put(
-                        ctx, artifact, tier=self._store_tier(), saved_per_use=saved
-                    )
-            elif store_it:
-                # Two-phase: context-only prefill -> snapshot (valid for SSM
-                # state, which must not include prompt tokens) -> prompt.
-                ctx_tokens = jnp.asarray([ctx], jnp.int32)
-                _, temp = self._jit_prefill(self.params, ctx_tokens, temp)
-                artifact = paged.extract_slot(self.cfg, temp, 0, len(ctx))
-                self.store.put(
-                    ctx, artifact, tier=self._store_tier(), saved_per_use=saved
-                )
-                tokens = jnp.asarray([prompt], jnp.int32)
-                logits, temp = self._jit_prefill(self.params, tokens, temp)
-            else:
-                tokens = jnp.asarray([ctx + prompt], jnp.int32)
-                logits, temp = self._jit_prefill(self.params, tokens, temp)
-            prefill_s = self.perf.t_prefill(self.cost_cfg, len(ctx) + len(prompt))
+            load_s, matched = 0.0, 0
+            prefill_s, logits, temp = self._execute_recompute(req, plan, events)
 
         # ---- install into the batch slot ------------------------------- #
-        self._state = paged.insert_slot(
-            self.cfg, self._state, slot.index, _as_artifact(temp)
-        )
+        self._state = paged.insert_slot(self.cfg, self._state, slot.index, temp)
         first_tok = int(jnp.argmax(logits[0]))
 
         self.clock.advance(load_s + prefill_s)
-        rec.action = decision.action if decision.loads_kv else "recompute"
+        rec.action = plan.action if plan.loads_kv else "recompute"
+        rec.plan = plan
         rec.matched_tokens = matched
         rec.load_s = load_s
         rec.prefill_s = prefill_s
         rec.compute_cost += self._c_gpu_s * prefill_s
         rec.tokens.append(first_tok)
+        events.append(
+            ev.TokenEmitted(t_s=self.clock.now, req_id=req.req_id, token=first_tok, index=0)
+        )
 
         slot.request = req
         slot.record = rec
         slot.generated = 1
         slot.last_token = first_tok
         slot.active = True
-        self._maybe_finish(slot)
+        self._maybe_finish(slot, events)
         self._issue_prefetches()
         return True
+
+    def _lookup(self, req: Request) -> StoreLookup:
+        """Consult the store about the request's context; quantify how much of
+        it the architecture can actually consume."""
+        if not self.ec.reuse_enabled:
+            return StoreLookup.miss()
+        match, entry = self.store.lookup(list(req.context_tokens))
+        partial_ok = paged.partial_reuse_allowed(self.cfg) and req.embeds is None
+        frac = 0.0
+        n_ctx = len(req.context_tokens)
+        if entry is not None and match.matched_tokens > 0:
+            if match.matched_tokens >= n_ctx:
+                frac = 1.0
+            elif partial_ok:
+                frac = match.matched_tokens / n_ctx
+        return StoreLookup(match=match, entry=entry, fraction=frac, partial_ok=partial_ok)
+
+    # ------------------------------------------------------------------ #
+    # Execute: the two plan interpretations
+    # ------------------------------------------------------------------ #
+    def _execute_load(
+        self, req: Request, plan: ReusePlan, lookup: StoreLookup,
+        events: List[ev.Event],
+    ):
+        """Fetch stored context state, insert it, prefill only the unmatched
+        tail + prompt."""
+        entry = lookup.entry
+        matched = plan.matched_tokens
+        temp = self.api.init_state(self.cfg, 1, self.ec.max_len)
+        artifact, delay = self.store.fetch(
+            entry.entry_id, fraction=matched / entry.n_tokens
+        )
+        nbytes = plan.fetch_bytes
+        if self.cost_cfg is not self.cfg:
+            # economics-at-scale: charge the FULL arch's KV bytes
+            nbytes = s_storage_bytes(
+                self.cost_cfg, matched,
+                compression=0.5 if self.ec.compress_tier == entry.tier else 1.0,
+            )
+            delay = self.store.estimate_load_delay(entry.tier, nbytes)
+        ready = self._prefetch_ready.pop(req.req_id, None)
+        if ready is not None:
+            # fetch was issued while earlier requests were being served:
+            # only the unfinished remainder delays this request.
+            delay = max(0.0, min(delay, ready - self.clock.now))
+        temp = paged.insert_slot(self.cfg, temp, 0, artifact, n_tokens=matched)
+        ctx = list(req.context_tokens)
+        tail = [] if req.embeds is not None else ctx[matched:]
+        tokens = jnp.asarray([tail + list(req.prompt_tokens)], jnp.int32)
+        logits, temp = self._jit_prefill(self.params, tokens, temp)
+        prefill_s = self.perf.t_prefill(
+            self.cost_cfg, len(tail) + len(req.prompt_tokens)
+        )
+        if self.ec.overlap_load:
+            load_s = max(0.0, delay - prefill_s)
+        else:
+            load_s = delay
+        events.append(
+            ev.KVLoaded(
+                t_s=self.clock.now, req_id=req.req_id, tier=entry.tier,
+                nbytes=nbytes, load_s=load_s, matched_tokens=matched,
+            )
+        )
+        events.append(
+            ev.PrefillDone(
+                t_s=self.clock.now, req_id=req.req_id,
+                n_tokens=len(tail) + len(req.prompt_tokens), prefill_s=prefill_s,
+            )
+        )
+        return load_s, prefill_s, logits, temp
+
+    def _execute_recompute(
+        self, req: Request, plan: ReusePlan, events: List[ev.Event]
+    ):
+        """Full prefill; write the context state back iff the plan says so."""
+        ctx, prompt = list(req.context_tokens), list(req.prompt_tokens)
+        temp = self.api.init_state(self.cfg, 1, self.ec.max_len)
+        saved = self._c_gpu_s * self.perf.t_prefill(self.cost_cfg, len(ctx))
+
+        def write_back(artifact):
+            entry_id, _ = self.store.put(
+                ctx, artifact, tier=self._store_tier(), saved_per_use=saved
+            )
+            if entry_id is not None:
+                e = self.store.entries[entry_id]
+                events.append(
+                    ev.StoreWriteBack(
+                        t_s=self.clock.now, req_id=req.req_id,
+                        entry_id=entry_id, tier=e.tier, nbytes=e.nbytes,
+                    )
+                )
+
+        if req.embeds is not None:
+            # VLM/audio context: the context IS the embeddings. Single
+            # phase — positions [0, ctx) of the state depend only on the
+            # embeds, so the artifact is extractable post-hoc.
+            tokens = jnp.asarray([prompt], jnp.int32)
+            logits, temp = self._jit_prefill(
+                self.params, tokens, temp, embeds=req.embeds
+            )
+            if plan.store_after:
+                write_back(paged.extract_slot(self.cfg, temp, 0, len(ctx)))
+        elif plan.store_after:
+            # Two-phase: context-only prefill -> snapshot (valid for SSM
+            # state, which must not include prompt tokens) -> prompt.
+            ctx_tokens = jnp.asarray([ctx], jnp.int32)
+            _, temp = self._jit_prefill(self.params, ctx_tokens, temp)
+            write_back(paged.extract_slot(self.cfg, temp, 0, len(ctx)))
+            tokens = jnp.asarray([prompt], jnp.int32)
+            logits, temp = self._jit_prefill(self.params, tokens, temp)
+        else:
+            tokens = jnp.asarray([ctx + prompt], jnp.int32)
+            logits, temp = self._jit_prefill(self.params, tokens, temp)
+        prefill_s = self.perf.t_prefill(self.cost_cfg, len(ctx) + len(prompt))
+        events.append(
+            ev.PrefillDone(
+                t_s=self.clock.now, req_id=req.req_id,
+                n_tokens=len(ctx) + len(prompt), prefill_s=prefill_s,
+            )
+        )
+        return prefill_s, logits, temp
 
     def _issue_prefetches(self) -> None:
         """Lookahead: start storage fetches for queued requests whose contexts
@@ -332,9 +414,7 @@ class ServingEngine:
                 )
             else:
                 nbytes = e.nbytes * m.matched_tokens / max(e.n_tokens, 1)
-            delay = self.perf.kv_load_time(nbytes, self.pricing.tier(e.tier))
-            if self.ec.hedge is not None:
-                delay = self.ec.hedge.effective_delay(delay)
+            delay = self.store.estimate_load_delay(e.tier, nbytes)
             self._prefetch_ready[nxt.req_id] = self.clock.now + delay
 
     def _store_tier(self) -> str:
@@ -343,7 +423,7 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     # Batched decode
     # ------------------------------------------------------------------ #
-    def _decode_step(self) -> None:
+    def _decode_step(self, events: List[ev.Event]) -> None:
         active = np.array([s.active for s in self.slots])
         toks = np.array(
             [[s.last_token if s.active else 0] for s in self.slots], np.int32
@@ -370,10 +450,16 @@ class ServingEngine:
             s.record.decode_s += step_s
             s.record.compute_cost += per_req_cost
             s.last_token = tok
+            events.append(
+                ev.TokenEmitted(
+                    t_s=self.clock.now, req_id=s.request.req_id,
+                    token=tok, index=s.generated,
+                )
+            )
             s.generated += 1
-            self._maybe_finish(s)
+            self._maybe_finish(s, events)
 
-    def _maybe_finish(self, s: Slot) -> None:
+    def _maybe_finish(self, s: Slot, events: List[ev.Event]) -> None:
         req = s.request
         done = s.generated >= req.max_new_tokens or (
             req.eos_token is not None and s.last_token == req.eos_token
@@ -381,10 +467,10 @@ class ServingEngine:
         if done:
             s.record.finish_s = self.clock.now
             self.records.append(s.record)
+            events.append(
+                ev.RequestFinished(
+                    t_s=self.clock.now, req_id=req.req_id, record=s.record
+                )
+            )
             s.active = False
             s.request = None
-
-
-def _as_artifact(temp_state):
-    """A freshly prefillled batch-1 state is itself an insertable artifact."""
-    return temp_state

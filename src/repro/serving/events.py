@@ -1,0 +1,106 @@
+"""Typed events emitted by the step-driven serving engine.
+
+Every observable state change in a request's lifecycle is an event carrying
+the SimClock time at which it happened.  ``ServingEngine.step()`` returns the
+events of one scheduling step; traces, streaming callers, benchmarks, and
+tests all consume the same stream instead of poking engine internals.
+
+Lifecycle of one request:
+
+    RequestAdmitted -> PlanChosen -> ([KVLoaded] | [StoreWriteBack])
+        -> PrefillDone -> TokenEmitted* -> RequestFinished
+
+(StoreWriteBack precedes PrefillDone because the two-phase recompute path
+snapshots the context state between the context and prompt prefills.)
+
+``ClockAdvanced`` appears between requests when the engine is idle and jumps
+simulated time to the next arrival.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Union
+
+from repro.serving.planner import ReusePlan
+from repro.serving.request import RequestRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Base event: SimClock time + the request it concerns (-1 = engine)."""
+
+    t_s: float
+    req_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestAdmitted(Event):
+    slot: int
+    queue_s: float  # time spent waiting for a slot
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanChosen(Event):
+    plan: ReusePlan
+
+
+@dataclasses.dataclass(frozen=True)
+class KVLoaded(Event):
+    tier: str
+    nbytes: float
+    load_s: float  # delay charged to this request (post-hedge/prefetch/overlap)
+    matched_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillDone(Event):
+    n_tokens: int  # tokens actually prefilled (context tail + prompt)
+    prefill_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreWriteBack(Event):
+    entry_id: str
+    tier: str
+    nbytes: float
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEmitted(Event):
+    token: int
+    index: int  # 0-based position in the generation
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestFinished(Event):
+    record: RequestRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockAdvanced(Event):
+    to_s: float
+
+
+AnyEvent = Union[
+    RequestAdmitted, PlanChosen, KVLoaded, PrefillDone, StoreWriteBack,
+    TokenEmitted, RequestFinished, ClockAdvanced,
+]
+
+
+def actions_from_events(events: List[Event]) -> dict:
+    """req_id -> executed action, reconstructed from the plan stream (the
+    event-trace view of what RequestRecord.action records)."""
+    out = {}
+    for ev in events:
+        if isinstance(ev, PlanChosen):
+            out[ev.req_id] = ev.plan.action
+    return out
+
+
+def tokens_from_events(events: List[Event]) -> dict:
+    """req_id -> generated tokens, reconstructed from TokenEmitted events."""
+    out: dict = {}
+    for ev in events:
+        if isinstance(ev, TokenEmitted):
+            out.setdefault(ev.req_id, []).append(ev.token)
+    return out

@@ -1,8 +1,13 @@
-"""Serving metrics: delay distributions + the paper's cost breakdown."""
+"""Serving metrics: delay distributions + the paper's cost breakdown.
+
+Two entry points: ``summarize`` over the engine's records, and
+``summarize_events`` over a typed event stream (``serving/events.py``) — the
+latter lets streaming consumers that only kept the events produce the same
+summary the engine would."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, Iterable, List
 
 import numpy as np
 
@@ -53,4 +58,20 @@ def summarize(
         storage_cost=storage_cost,
         transfer_cost=transfer_cost,
         horizon_s=float(max((r.finish_s for r in records), default=0.0)),
+    )
+
+
+def summarize_events(
+    events: Iterable,
+    *,
+    storage_cost: float,
+    transfer_cost: float,
+) -> ServingSummary:
+    """Summary from a typed event stream: every finished request's record
+    rides on its RequestFinished event, so the stream is self-sufficient."""
+    from repro.serving.events import RequestFinished
+
+    records = [e.record for e in events if isinstance(e, RequestFinished)]
+    return summarize(
+        records, storage_cost=storage_cost, transfer_cost=transfer_cost
     )

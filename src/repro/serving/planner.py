@@ -1,0 +1,200 @@
+"""Plan half of the serving engine's plan/execute split.
+
+Per admitted request the engine asks a ``ReusePlanner`` one question — given
+this request, what the store knows about its context (``StoreLookup``), and
+its workload shape, what should happen?  The answer is a declarative
+``ReusePlan``: recompute or load (fully/partially) from which tier, how many
+bytes move, whether to write the context back after prefill, and the
+analytical model's TTFT/$ estimates for the chosen option.  Planning is pure
+(no store/compute side effects), so planner variants — the paper's
+cost-model gating, unconditional reuse, or future CacheBlend/KVShare-style
+schemes — are drop-in and unit-testable against golden plans.
+
+Two planners ship:
+
+  * ``CostAwarePlanner``   — the paper's policy: recompute/load/partial by
+    analytical cost under the TTFT SLO (``core.policy.decide``), write-back
+    iff expected reuses clear break-even (``core.policy.should_store``).
+  * ``AlwaysReusePlanner`` — store & reuse unconditionally (correctness
+    tests, and the paper's own Fig-2 experiment which always reuses).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Protocol, runtime_checkable
+
+from repro.configs.base import ArchConfig
+from repro.core import policy as policy_mod
+from repro.core.cost_model import Workload
+from repro.core.perf_model import PerfModel
+from repro.core.pricing import Pricing
+from repro.kvcache.chunks import PrefixMatch
+from repro.kvcache.store import StoredEntry
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreLookup:
+    """What the store knows about a request's context at plan time."""
+
+    match: Optional[PrefixMatch]
+    entry: Optional[StoredEntry]
+    # usable fraction of the request's context covered by the stored prefix
+    # (0 when nothing is stored, or when a partial prefix exists but the
+    # architecture cannot consume it — SSM state is all-or-nothing).
+    fraction: float
+    partial_ok: bool
+
+    @property
+    def hit(self) -> bool:
+        return self.entry is not None and self.fraction > 0
+
+    def available(self) -> Dict[str, float]:
+        """tier name -> matched fraction, the policy's option set."""
+        return {self.entry.tier: self.fraction} if self.hit else {}
+
+    @staticmethod
+    def miss() -> "StoreLookup":
+        return StoreLookup(match=None, entry=None, fraction=0.0, partial_ok=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReusePlan:
+    """Declarative outcome of planning one request (execute interprets it)."""
+
+    action: str  # "recompute" | "load" | "partial"
+    tier: Optional[str]  # source tier when loading
+    matched_tokens: int  # context tokens served from stored state
+    reused_fraction: float
+    fetch_bytes: float  # stored bytes that will move (0 for recompute)
+    store_after: bool  # write the context state back after prefill
+    est_ttft_s: float  # analytical-model estimates for the chosen option
+    est_cost: float
+
+    @property
+    def loads_kv(self) -> bool:
+        return self.action in ("load", "partial")
+
+
+@runtime_checkable
+class ReusePlanner(Protocol):
+    """Pure request-level reuse policy: (request, lookup, workload) -> plan."""
+
+    def configure(
+        self,
+        *,
+        cost_cfg: ArchConfig,
+        pricing: Pricing,
+        perf: PerfModel,
+        write_back: bool,
+        min_store_tokens: int,
+    ) -> None:
+        """Bind the engine's economics environment (called once at engine
+        construction; planners are created bare by callers)."""
+        ...
+
+    def plan(self, request: Request, lookup: StoreLookup, workload: Workload) -> ReusePlan:
+        ...
+
+
+class _PlannerBase:
+    """Environment binding + the decision->plan translation shared by the
+    shipped planners."""
+
+    def __init__(self) -> None:
+        self.cost_cfg: Optional[ArchConfig] = None
+        self.pricing: Optional[Pricing] = None
+        self.perf: Optional[PerfModel] = None
+        self.write_back: bool = True
+        self.min_store_tokens: int = 1
+
+    def configure(
+        self,
+        *,
+        cost_cfg: ArchConfig,
+        pricing: Pricing,
+        perf: PerfModel,
+        write_back: bool,
+        min_store_tokens: int,
+    ) -> None:
+        self.cost_cfg = cost_cfg
+        self.pricing = pricing
+        self.perf = perf
+        self.write_back = write_back
+        self.min_store_tokens = min_store_tokens
+
+    # -- helpers -------------------------------------------------------- #
+    def _storable(self, request: Request, lookup: StoreLookup) -> bool:
+        """Write-back is even on the table only when enabled, the context is
+        not already stored, and it spans at least one chunk."""
+        return (
+            self.write_back
+            and lookup.entry is None
+            and len(request.context_tokens) >= self.min_store_tokens
+        )
+
+    def _to_plan(
+        self,
+        decision: policy_mod.Decision,
+        request: Request,
+        lookup: StoreLookup,
+        *,
+        store_after: bool,
+    ) -> ReusePlan:
+        matched = 0
+        fetch_bytes = 0.0
+        if decision.loads_kv and lookup.entry is not None:
+            matched = (
+                len(request.context_tokens)
+                if decision.action == "load"
+                else lookup.match.matched_tokens
+            )
+            e = lookup.entry
+            fetch_bytes = e.nbytes * max(0.0, min(1.0, matched / max(e.n_tokens, 1)))
+        return ReusePlan(
+            action=decision.action,
+            tier=decision.tier,
+            matched_tokens=matched,
+            reused_fraction=decision.reused_fraction,
+            fetch_bytes=fetch_bytes,
+            store_after=store_after and not decision.loads_kv,
+            est_ttft_s=decision.est_ttft_s,
+            est_cost=decision.est_cost,
+        )
+
+
+class CostAwarePlanner(_PlannerBase):
+    """The paper's policy: cheapest SLO-satisfying option, break-even-gated
+    write-back."""
+
+    def plan(self, request: Request, lookup: StoreLookup, workload: Workload) -> ReusePlan:
+        decision = policy_mod.decide(
+            self.cost_cfg, workload, self.pricing, self.perf,
+            available=lookup.available(),
+        )
+        store_after = self._storable(request, lookup) and policy_mod.should_store(
+            self.cost_cfg, workload, self.pricing, self.perf,
+            expected_reuses=request.expected_reuses,
+        )
+        return self._to_plan(decision, request, lookup, store_after=store_after)
+
+
+class AlwaysReusePlanner(_PlannerBase):
+    """Unconditional store & reuse (the paper's Fig-2 pipeline): any stored
+    prefix is loaded, every new context is written back."""
+
+    def plan(self, request: Request, lookup: StoreLookup, workload: Workload) -> ReusePlan:
+        available = lookup.available()
+        if available:
+            tier, frac = next(iter(available.items()))
+            decision = policy_mod.Decision(
+                action="load" if frac >= 1.0 else "partial",
+                tier=tier, reused_fraction=frac, est_ttft_s=0.0, est_cost=0.0,
+            )
+        else:
+            decision = policy_mod.decide(
+                self.cost_cfg, workload, self.pricing, self.perf, available={}
+            )
+        return self._to_plan(
+            decision, request, lookup, store_after=self._storable(request, lookup)
+        )

@@ -39,6 +39,10 @@ class RequestRecord:
     tokens: List[int] = dataclasses.field(default_factory=list)
     action: str = ""  # recompute | load | partial
     matched_tokens: int = 0
+    # the declarative ReusePlan this request executed (typed as object to
+    # keep request types dependency-free; see serving/planner.py) — realized
+    # load_s/prefill_s below can be audited against its est_ttft_s.
+    plan: Optional[object] = None
     start_s: float = 0.0
     load_s: float = 0.0
     prefill_s: float = 0.0

@@ -33,39 +33,49 @@ class HedgePolicy:
 
 
 class AdmissionQueue:
-    """Requests ordered by (deadline slack, arrival)."""
+    """Requests ordered by (deadline slack, arrival), as a two-heap scheme.
+
+    ``_pending`` holds not-yet-arrived requests keyed by arrival time;
+    ``_promote`` migrates everything whose arrival has passed into ``_ready``,
+    an EDF heap keyed by (deadline, arrival, seq).  Pops and pushes are
+    O(log n) — the previous implementation linearly scanned and re-heapified
+    the whole queue on every pop."""
 
     def __init__(self):
-        self._heap: List = []
-        self._n = 0
+        self._pending: List = []  # (arrival, seq, deadline, req)
+        self._ready: List = []  # (deadline, arrival, seq, req)
+        self._seq = 0
 
     def push(self, req: Request) -> None:
         deadline = (
             req.arrival_s + req.slo_ttft_s if req.slo_ttft_s is not None else float("inf")
         )
-        heapq.heappush(self._heap, (req.arrival_s, deadline, self._n, req))
-        self._n += 1
+        heapq.heappush(self._pending, (req.arrival_s, self._seq, deadline, req))
+        self._seq += 1
+
+    def _promote(self, now: float) -> None:
+        while self._pending and self._pending[0][0] <= now:
+            arrival, seq, deadline, req = heapq.heappop(self._pending)
+            heapq.heappush(self._ready, (deadline, arrival, seq, req))
 
     def pop_admissible(self, now: float) -> Optional[Request]:
         """Earliest-deadline-first among requests that have arrived."""
-        arrived = [e for e in self._heap if e[0] <= now]
-        if not arrived:
+        self._promote(now)
+        if not self._ready:
             return None
-        best = min(arrived, key=lambda e: (e[1], e[0], e[2]))
-        self._heap.remove(best)
-        heapq.heapify(self._heap)
-        return best[3]
+        return heapq.heappop(self._ready)[3]
 
     def next_arrival(self) -> Optional[float]:
-        return min((e[0] for e in self._heap), default=None)
+        cands = [e[1] for e in self._ready]  # arrived but unadmitted
+        if self._pending:
+            cands.append(self._pending[0][0])
+        return min(cands, default=None)
 
     def peek_arrived(self, now: float, limit: int = 4) -> List[Request]:
         """Arrived-but-unadmitted requests in admission order (no removal) —
         the prefetch lookahead window."""
-        arrived = sorted(
-            (e for e in self._heap if e[0] <= now), key=lambda e: (e[1], e[0], e[2])
-        )
-        return [e[3] for e in arrived[:limit]]
+        self._promote(now)
+        return [e[3] for e in heapq.nsmallest(limit, self._ready)]
 
     def __len__(self) -> int:
-        return len(self._heap)
+        return len(self._pending) + len(self._ready)

@@ -114,8 +114,8 @@ def test_elastic_reshape_restore(tmp_path):
 
     _, params, _ = _tiny()
     ckpt.save(tmp_path, 1, params)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     restored, _ = ckpt.restore(tmp_path, params)
     sharded = jax.tree_util.tree_map(
         lambda x: jax.device_put(x, NamedSharding(mesh, P())), restored

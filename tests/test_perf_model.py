@@ -1,6 +1,6 @@
 """Analytical performance model: structural properties across archs."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.perf_model import PerfModel, V100_X4, tpu_v5e

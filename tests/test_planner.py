@@ -1,0 +1,166 @@
+"""ReusePlanner golden tests: CostAware vs AlwaysReuse on shared workloads.
+
+Planning is pure — (request, lookup, workload) in, declarative ReusePlan out
+— so these tests pin the policy boundary without touching an engine, JAX, or
+a store: lookups are synthesized StoredEntry/PrefixMatch facts."""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import policy as policy_mod
+from repro.core.cost_model import Workload
+from repro.core.perf_model import PerfModel, V100_X4_HF
+from repro.core.pricing import AWS_PAPER
+from repro.kvcache.chunks import PrefixMatch
+from repro.kvcache.store import StoredEntry
+from repro.serving import AlwaysReusePlanner, CostAwarePlanner, ReusePlan, StoreLookup
+from repro.serving.request import Request
+
+LLAMA = get_config("llama-7b")
+PERF = PerfModel(V100_X4_HF)
+
+# the paper's workload shape: 10K-token context reused ~5x, short prompt/output
+PAPER_W = Workload(L_context=10_000, L_prompt=32, L_output=32, N=5)
+PAPER_REQ = Request(
+    req_id=0, context_tokens=list(range(10_000)), prompt_tokens=list(range(32)),
+    max_new_tokens=32, expected_reuses=5.0,
+)
+
+
+def _planner(cls, **kw):
+    p = cls()
+    cfg = dict(cost_cfg=LLAMA, pricing=AWS_PAPER, perf=PERF,
+               write_back=True, min_store_tokens=256)
+    cfg.update(kw)
+    p.configure(**cfg)
+    return p
+
+
+def _entry(n_tokens=10_240, tier="io2", nbytes=5.2e9):
+    return StoredEntry(
+        entry_id="ctx0", chain=["h"] * (n_tokens // 256), n_tokens=n_tokens,
+        nbytes=int(nbytes), compressed=False, tier=tier,
+        created_s=0.0, last_used_s=0.0,
+    )
+
+
+def _hit(matched_tokens, n_ctx=10_000, partial_ok=True, **entry_kw):
+    e = _entry(**entry_kw)
+    frac = 1.0 if matched_tokens >= n_ctx else (
+        matched_tokens / n_ctx if partial_ok else 0.0
+    )
+    return StoreLookup(
+        match=PrefixMatch(entry_id=e.entry_id, matched_chunks=matched_tokens // 256,
+                          matched_tokens=matched_tokens, total_chunks=40),
+        entry=e, fraction=frac, partial_ok=partial_ok,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Golden plans on the paper's workload
+# --------------------------------------------------------------------------- #
+def test_cost_aware_miss_recomputes_and_stores():
+    """First sight of a reusable 10K context: recompute now, write back (the
+    paper's break-even at N=5 clearly clears for io2)."""
+    plan = _planner(CostAwarePlanner).plan(PAPER_REQ, StoreLookup.miss(), PAPER_W)
+    assert plan == ReusePlan(
+        action="recompute", tier=None, matched_tokens=0, reused_fraction=0.0,
+        fetch_bytes=0.0, store_after=True,
+        est_ttft_s=plan.est_ttft_s, est_cost=plan.est_cost,
+    )
+    assert plan.est_ttft_s > 0 and plan.est_cost > 0
+
+
+def test_cost_aware_full_hit_loads():
+    """Stored full-context KV on io2 beats a 10K-token prefill on both $ and
+    delay (the paper's headline comparison)."""
+    lookup = _hit(matched_tokens=10_240)
+    miss_plan = _planner(CostAwarePlanner).plan(PAPER_REQ, StoreLookup.miss(), PAPER_W)
+    plan = _planner(CostAwarePlanner).plan(PAPER_REQ, lookup, PAPER_W)
+    assert plan.action == "load" and plan.tier == "io2"
+    assert plan.matched_tokens == 10_000  # full context served from store
+    assert plan.reused_fraction == 1.0
+    assert plan.fetch_bytes == pytest.approx(lookup.entry.nbytes * 10_000 / 10_240)
+    assert not plan.store_after  # already stored
+    assert plan.est_cost < miss_plan.est_cost
+    assert plan.est_ttft_s < miss_plan.est_ttft_s
+
+
+def test_cost_aware_partial_hit():
+    lookup = _hit(matched_tokens=5_120)
+    plan = _planner(CostAwarePlanner).plan(PAPER_REQ, lookup, PAPER_W)
+    assert plan.action == "partial"
+    assert plan.matched_tokens == 5_120
+    assert 0 < plan.reused_fraction < 1
+    assert plan.fetch_bytes == pytest.approx(lookup.entry.nbytes * 0.5)
+
+
+def test_cost_aware_respects_slo():
+    """A TTFT SLO tighter than the storage fetch forces the feasible option,
+    exactly as core.policy.decide picks it."""
+    w = dataclasses.replace(PAPER_W, slo_ttft_s=0.5)
+    lookup = _hit(matched_tokens=10_240, tier="s3")
+    plan = _planner(CostAwarePlanner).plan(PAPER_REQ, lookup, w)
+    want = policy_mod.decide(LLAMA, w, AWS_PAPER, PERF, available={"s3": 1.0})
+    assert plan.action == want.action
+    assert plan.est_ttft_s == pytest.approx(want.est_ttft_s)
+    assert plan.est_cost == pytest.approx(want.est_cost)
+
+
+def test_cost_aware_skips_worthless_store():
+    """One expected reuse of a tiny context never clears break-even: plain
+    recompute, no write-back."""
+    req = dataclasses.replace(PAPER_REQ, context_tokens=list(range(512)),
+                              expected_reuses=1.0)
+    w = Workload(L_context=512, L_prompt=32, L_output=32, N=1)
+    plan = _planner(CostAwarePlanner).plan(req, StoreLookup.miss(), w)
+    assert plan.action == "recompute" and not plan.store_after
+
+
+def test_always_reuse_stores_on_miss_regardless_of_economics():
+    req = dataclasses.replace(PAPER_REQ, context_tokens=list(range(512)),
+                              expected_reuses=1.0)
+    w = Workload(L_context=512, L_prompt=32, L_output=32, N=1)
+    plan = _planner(AlwaysReusePlanner).plan(req, StoreLookup.miss(), w)
+    assert plan.action == "recompute" and plan.store_after
+
+
+def test_always_reuse_loads_any_hit():
+    full = _planner(AlwaysReusePlanner).plan(PAPER_REQ, _hit(10_240), PAPER_W)
+    part = _planner(AlwaysReusePlanner).plan(PAPER_REQ, _hit(2_560), PAPER_W)
+    assert (full.action, part.action) == ("load", "partial")
+    assert part.matched_tokens == 2_560
+    # unconditional mode doesn't consult the cost model
+    assert full.est_cost == 0.0 and full.est_ttft_s == 0.0
+
+
+def test_planners_diverge_only_on_policy():
+    """Same facts, different policies: cost-aware may refuse what always-reuse
+    takes, but both describe the same option set."""
+    lookup = _hit(matched_tokens=10_240, tier="s3")
+    w = dataclasses.replace(PAPER_W, slo_ttft_s=0.05)  # infeasible for s3
+    cost = _planner(CostAwarePlanner).plan(PAPER_REQ, lookup, w)
+    always = _planner(AlwaysReusePlanner).plan(PAPER_REQ, lookup, w)
+    assert always.action == "load"  # ignores the SLO
+    assert cost.action in ("recompute", "load")  # degrades explicitly
+
+
+def test_write_back_gates():
+    """min_store_tokens and write_back both veto storing, for both planners."""
+    for cls in (CostAwarePlanner, AlwaysReusePlanner):
+        short = _planner(cls, min_store_tokens=100_000).plan(
+            PAPER_REQ, StoreLookup.miss(), PAPER_W)
+        assert not short.store_after
+        off = _planner(cls, write_back=False).plan(
+            PAPER_REQ, StoreLookup.miss(), PAPER_W)
+        assert not off.store_after
+
+
+def test_plan_is_pure_and_frozen():
+    p = _planner(CostAwarePlanner)
+    a = p.plan(PAPER_REQ, _hit(10_240), PAPER_W)
+    b = p.plan(PAPER_REQ, _hit(10_240), PAPER_W)
+    assert a == b
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.action = "load"

@@ -1,5 +1,12 @@
-"""Serving-engine end-to-end: the paper's pipelines, numerically exact."""
+"""Serving-engine end-to-end: the paper's pipelines, numerically exact.
+
+All engine construction goes through the plan/execute API: a ``ReusePlanner``
+picks recompute/load/partial per request, the step-driven engine executes the
+plan over pluggable storage backends.  Golden-parity tests pin the refactored
+engine to the seed engine's recorded actions and costs (1e-9)."""
 import dataclasses
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -8,8 +15,17 @@ import pytest
 
 from repro.configs import get_config, reduced_config
 from repro.models import registry
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import (
+    AlwaysReusePlanner,
+    CostAwarePlanner,
+    EngineConfig,
+    Request,
+    ServingEngine,
+)
+from repro.serving import events as ev
 from repro.serving.scheduler import AdmissionQueue, HedgePolicy
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "serving_golden_seed.json"
 
 
 def _setup(arch, seed=0):
@@ -37,11 +53,25 @@ def _requests(cfg, n=6, n_ctx=2, ctx_len=64, prompt_len=8, new=4, seed=0):
     return out
 
 
-def _run(cfg, params, reqs, **ec_kw):
+def _partial_requests(cfg, seed=3):
+    rng = np.random.default_rng(seed)
+    shared = list(map(int, rng.integers(0, cfg.vocab, 32)))
+    ctx_a = shared + list(map(int, rng.integers(0, cfg.vocab, 16)))
+    ctx_b = shared + list(map(int, rng.integers(0, cfg.vocab, 16)))
+    prompt = list(map(int, rng.integers(0, cfg.vocab, 8)))
+    return [
+        dict(req_id=0, context_tokens=ctx_a, prompt_tokens=prompt, max_new_tokens=3,
+             arrival_s=0.0, expected_reuses=2),
+        dict(req_id=1, context_tokens=ctx_b, prompt_tokens=prompt, max_new_tokens=3,
+             arrival_s=0.01, expected_reuses=2),
+    ]
+
+
+def _run(cfg, params, reqs, planner=None, **ec_kw):
     kw = dict(max_slots=2, max_len=128, chunk_tokens=16)
     kw.update(ec_kw)
     ec = EngineConfig(**kw)
-    eng = ServingEngine(cfg, params, engine_cfg=ec)
+    eng = ServingEngine(cfg, params, engine_cfg=ec, planner=planner)
     for r in reqs:
         eng.submit(Request(**r))
     summary = eng.run()
@@ -59,7 +89,7 @@ def test_reuse_tokens_identical_to_recompute(arch):
     identical generations vs full recomputation."""
     cfg, params = _setup(arch)
     reqs = _requests(cfg)
-    _, s_yes, toks_yes, acts = _run(cfg, params, reqs, policy_mode="always")
+    _, s_yes, toks_yes, acts = _run(cfg, params, reqs, planner=AlwaysReusePlanner())
     _, s_no, toks_no, _ = _run(cfg, params, reqs, reuse_enabled=False)
     assert toks_yes == toks_no
     assert sum(1 for a in acts.values() if a == "load") >= len(reqs) - 2
@@ -70,18 +100,8 @@ def test_partial_prefix_reuse_dense():
     """Two contexts sharing a 32-token prefix: the second request partially
     reuses the first's stored KV and still matches recompute exactly."""
     cfg, params = _setup("llama-7b")
-    rng = np.random.default_rng(3)
-    shared = list(map(int, rng.integers(0, cfg.vocab, 32)))
-    ctx_a = shared + list(map(int, rng.integers(0, cfg.vocab, 16)))
-    ctx_b = shared + list(map(int, rng.integers(0, cfg.vocab, 16)))
-    prompt = list(map(int, rng.integers(0, cfg.vocab, 8)))
-    reqs = [
-        dict(req_id=0, context_tokens=ctx_a, prompt_tokens=prompt, max_new_tokens=3,
-             arrival_s=0.0, expected_reuses=2),
-        dict(req_id=1, context_tokens=ctx_b, prompt_tokens=prompt, max_new_tokens=3,
-             arrival_s=0.01, expected_reuses=2),
-    ]
-    _, _, toks_yes, acts = _run(cfg, params, reqs, policy_mode="always")
+    reqs = _partial_requests(cfg)
+    _, _, toks_yes, acts = _run(cfg, params, reqs, planner=AlwaysReusePlanner())
     _, _, toks_no, _ = _run(cfg, params, reqs, reuse_enabled=False)
     assert acts[1] == "partial"
     assert toks_yes == toks_no
@@ -102,7 +122,7 @@ def test_partial_reuse_disallowed_for_ssm():
         dict(req_id=1, context_tokens=ctx_b, prompt_tokens=prompt, max_new_tokens=2,
              arrival_s=0.01, expected_reuses=2),
     ]
-    _, _, toks_yes, acts = _run(cfg, params, reqs, policy_mode="always")
+    _, _, toks_yes, acts = _run(cfg, params, reqs, planner=AlwaysReusePlanner())
     _, _, toks_no, _ = _run(cfg, params, reqs, reuse_enabled=False)
     assert acts[1] == "recompute"
     assert toks_yes == toks_no
@@ -113,7 +133,7 @@ def test_compressed_tier_close_but_cheaper():
     engine runs and the stored bytes shrink ~2x."""
     cfg, params = _setup("llama-7b")
     reqs = _requests(cfg, n=4, n_ctx=1)
-    eng, s, toks, acts = _run(cfg, params, reqs, policy_mode="always",
+    eng, s, toks, acts = _run(cfg, params, reqs, planner=AlwaysReusePlanner(),
                               compress_tier="io2")
     assert s.reuse_hits >= 2
     e = next(iter(eng.store.entries.values()))
@@ -133,7 +153,7 @@ def test_whisper_cross_kv_reuse():
              max_new_tokens=3, arrival_s=i * 0.01, expected_reuses=3, embeds=frames)
         for i in range(3)
     ]
-    _, _, toks_yes, acts = _run(cfg, params, reqs, policy_mode="always")
+    _, _, toks_yes, acts = _run(cfg, params, reqs, planner=AlwaysReusePlanner())
     _, _, toks_no, _ = _run(cfg, params, reqs, reuse_enabled=False)
     assert toks_yes == toks_no
     assert list(acts.values()).count("load") == 2
@@ -152,7 +172,8 @@ def test_vlm_image_context_reuse():
         for i in range(3)
     ]
     # chunk must not exceed the (reduced) 8-token image-context proxy
-    _, _, toks_yes, acts = _run(cfg, params, reqs, policy_mode="always", chunk_tokens=8)
+    _, _, toks_yes, acts = _run(cfg, params, reqs, planner=AlwaysReusePlanner(),
+                                chunk_tokens=8)
     _, _, toks_no, _ = _run(cfg, params, reqs, reuse_enabled=False, chunk_tokens=8)
     assert toks_yes == toks_no
     assert list(acts.values()).count("load") == 2
@@ -165,7 +186,7 @@ def test_cost_policy_skips_worthless_contexts():
     reqs = _requests(cfg, n=4, n_ctx=1)
     for r in reqs:
         r["expected_reuses"] = 1.0
-    _, s, _, acts = _run(cfg, params, reqs, policy_mode="cost")
+    _, s, _, acts = _run(cfg, params, reqs, planner=CostAwarePlanner())
     assert all(a == "recompute" for a in acts.values())
     assert s.storage_cost == 0.0
 
@@ -187,10 +208,10 @@ def test_prefetch_lookahead_reduces_ttft():
 
     def run(prefetch):
         ec = EngineConfig(
-            max_slots=1, max_len=128, chunk_tokens=16, policy_mode="always",
+            max_slots=1, max_len=128, chunk_tokens=16,
             cost_arch="llama-7b", prefetch_lookahead=prefetch,
         )
-        eng = ServingEngine(cfg, params, engine_cfg=ec,
+        eng = ServingEngine(cfg, params, engine_cfg=ec, planner=AlwaysReusePlanner(),
                             pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF))
         for r in reqs:
             eng.submit(Request(**r))
@@ -217,3 +238,128 @@ def test_admission_queue_edf():
     assert q.pop_admissible(now=1.0).req_id == 0
     assert q.pop_admissible(now=1.0) is None  # req 2 hasn't arrived
     assert q.next_arrival() == 5.0
+
+
+def test_admission_queue_two_heap_consistency():
+    """peek_arrived agrees with pop order, and promotion never loses or
+    duplicates requests across pending/ready heaps."""
+    rng = np.random.default_rng(0)
+    q = AdmissionQueue()
+    n = 40
+    for i in range(n):
+        q.push(Request(
+            req_id=i, context_tokens=[], prompt_tokens=[1], max_new_tokens=1,
+            arrival_s=float(rng.uniform(0, 10)),
+            slo_ttft_s=float(rng.uniform(0.1, 5)) if i % 3 else None,
+        ))
+    assert len(q) == n
+    peeked = [r.req_id for r in q.peek_arrived(now=5.0, limit=5)]
+    popped = [q.pop_admissible(now=5.0).req_id for _ in range(5)]
+    assert peeked == popped
+    seen = set(popped)
+    while True:
+        nxt = q.pop_admissible(now=20.0)
+        if nxt is None:
+            break
+        assert nxt.req_id not in seen
+        seen.add(nxt.req_id)
+    assert len(seen) == n and len(q) == 0
+
+
+# --------------------------------------------------------------------------- #
+# Plan/execute parity with the seed engine
+# --------------------------------------------------------------------------- #
+def _golden_scenarios(cfg, params):
+    reqs = _requests(cfg)
+    return {
+        "always": (reqs, dict(planner=AlwaysReusePlanner())),
+        "cost": (reqs, dict(planner=CostAwarePlanner())),
+        "recompute": (reqs, dict(reuse_enabled=False)),
+        "partial_always": (_partial_requests(cfg), dict(planner=AlwaysReusePlanner())),
+    }
+
+
+def test_golden_parity_with_seed_engine():
+    """The refactored plan/execute engine reproduces the seed (pre-refactor)
+    engine's per-request actions and all modeled times/costs to 1e-9 on the
+    canonical serving scenarios (golden file captured from the seed code)."""
+    golden = json.loads(GOLDEN.read_text())
+    cfg, params = _setup("llama-7b")
+    for name, (reqs, kw) in _golden_scenarios(cfg, params).items():
+        eng, s, _, _ = _run(cfg, params, reqs, **kw)
+        want = golden[name]
+        recs = sorted(eng.records, key=lambda r: r.req_id)
+        assert len(recs) == len(want["records"]), name
+        for rec, w in zip(recs, want["records"]):
+            assert rec.action == w["action"], (name, rec.req_id)
+            assert rec.matched_tokens == w["matched_tokens"], (name, rec.req_id)
+            for field in ("load_s", "prefill_s", "decode_s", "start_s",
+                          "finish_s", "compute_cost"):
+                assert getattr(rec, field) == pytest.approx(w[field], abs=1e-9), (
+                    name, rec.req_id, field)
+        got = s.as_dict()
+        for k, v in want["summary"].items():
+            assert got[k] == pytest.approx(v, abs=1e-9), (name, k)
+
+
+def test_step_event_stream_matches_run():
+    """Driving the engine by explicit step() produces the same records and
+    summary as run(), and the event stream is complete and consistent."""
+    cfg, params = _setup("llama-7b")
+    reqs = _requests(cfg)
+
+    def fresh():
+        eng = ServingEngine(
+            cfg, params,
+            engine_cfg=EngineConfig(max_slots=2, max_len=128, chunk_tokens=16),
+            planner=AlwaysReusePlanner(),
+        )
+        for r in reqs:
+            eng.submit(Request(**r))
+        return eng
+
+    eng_run = fresh()
+    s_run = eng_run.run()
+
+    eng_step = fresh()
+    events = []
+    while not eng_step.idle:
+        events.append(eng_step.step())
+        assert events[-1], "a non-idle step must produce events"
+    s_step = eng_step.summary()
+
+    assert s_run.as_dict() == s_step.as_dict()
+    flat = [e for step in events for e in step]
+    # the event stream alone reproduces the summary (streaming consumers)
+    from repro.serving import metrics as metrics_mod
+
+    s_ev = metrics_mod.summarize_events(
+        flat,
+        storage_cost=eng_step.store.storage_cost(eng_step.pricing),
+        transfer_cost=eng_step.transfer.transfer_fees(),
+    )
+    assert s_ev.as_dict() == s_step.as_dict()
+    # every record carries the plan it executed
+    assert all(rec.plan is not None and rec.plan.action == rec.action
+               for rec in eng_step.records)
+    assert ev.tokens_from_events(flat) == {
+        rec.req_id: rec.tokens for rec in eng_step.records
+    }
+    assert ev.actions_from_events(flat) == {
+        rec.req_id: rec.action for rec in eng_step.records
+    }
+    finished = [e for e in flat if isinstance(e, ev.RequestFinished)]
+    assert sorted(e.req_id for e in finished) == sorted(r["req_id"] for r in reqs)
+    admitted = [e for e in flat if isinstance(e, ev.RequestAdmitted)]
+    plans = [e for e in flat if isinstance(e, ev.PlanChosen)]
+    assert len(admitted) == len(plans) == len(reqs)
+    loads = [e for e in flat if isinstance(e, ev.KVLoaded)]
+    assert len(loads) == sum(1 for r in eng_step.records if r.action != "recompute")
+    # events are time-ordered within the stream
+    times = [e.t_s for e in flat]
+    assert times == sorted(times)
+    # drain() on a third engine yields the same event sequence types
+    eng_drain = fresh()
+    drained = list(eng_drain.drain())
+    assert [type(e) for e in drained] == [type(e) for e in flat]
+    assert eng_drain.idle and not list(eng_drain.drain())

@@ -10,13 +10,19 @@ from repro.core.perf_model import PerfModel, V100_X4_HF
 from repro.core.pricing import AWS_PAPER
 from repro.data.synthetic import WorkloadSpec, serving_workload
 from repro.models import registry
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import (
+    AlwaysReusePlanner,
+    EngineConfig,
+    Request,
+    ServingEngine,
+)
 
 
-def _engine(cfg, params, **kw):
+def _engine(cfg, params, planner=None, **kw):
     return ServingEngine(
         cfg, params,
         engine_cfg=EngineConfig(max_slots=2, max_len=160, chunk_tokens=16, **kw),
+        planner=planner,
         pricing=AWS_PAPER,
         perf=PerfModel(V100_X4_HF),
     )
@@ -52,7 +58,7 @@ def test_paper_headline_reuse_saves_cost_and_delay(llama_small):
         s = eng.run()
         return eng, s, {rec.req_id: rec.tokens for rec in eng.records}
 
-    _, s_kv, toks_kv = run(policy_mode="always")
+    _, s_kv, toks_kv = run(planner=AlwaysReusePlanner())
     _, s_txt, toks_txt = run(reuse_enabled=False)
 
     assert toks_kv == toks_txt, "reuse changed generations"
@@ -68,7 +74,7 @@ def test_cross_request_prefix_sharing(llama_small):
     cfg, params = llama_small
     rng = np.random.default_rng(1)
     base = list(map(int, rng.integers(0, cfg.vocab, 64)))
-    eng = _engine(cfg, params, policy_mode="always")
+    eng = _engine(cfg, params, planner=AlwaysReusePlanner())
     for i in range(3):
         ctx = base[:48] + list(map(int, rng.integers(0, cfg.vocab, 16)))
         eng.submit(Request(req_id=i, context_tokens=ctx,
@@ -91,7 +97,7 @@ def test_storage_pressure_degrades_gracefully(llama_small):
         ctx = list(map(int, rng.integers(0, cfg.vocab, 64)))
         reqs.append(Request(req_id=i, context_tokens=ctx, prompt_tokens=[1, 2, 3, 4],
                             max_new_tokens=2, arrival_s=i * 0.01, expected_reuses=2))
-    eng = _engine(cfg, params, policy_mode="always",
+    eng = _engine(cfg, params, planner=AlwaysReusePlanner(),
                   tier_capacities_gb={"io2": 100e3 / 1e9})  # ~2 contexts worth
     for r in reqs:
         eng.submit(r)
