@@ -17,9 +17,24 @@ from repro.configs import get_config, reduced_config
 from repro.core.perf_model import PerfModel, V100_X4_HF
 from repro.core.pricing import AWS_PAPER
 from repro.data.synthetic import WorkloadSpec, serving_workload
+from repro.kvcache.hierarchy import TierSpec
 from repro.models import registry
 from repro.serving import AlwaysReusePlanner, EngineConfig, Request, ServingEngine
 from repro.serving.scheduler import HedgePolicy
+
+# The tier hierarchy rows: write-backs land hot (host_dram), the break-even
+# pass demotes cold entries toward s3, and the cloud link is bounded so burst
+# fetches queue instead of streaming for free in parallel.
+_HIERARCHY = dict(
+    tier_specs=[
+        TierSpec("host_dram", 64.0),
+        TierSpec("local_nvme", 512.0),
+        TierSpec("s3", 4096.0, concurrency=2),
+    ],
+    store_tier="host_dram",
+    migration_interval_s=1.0,
+    spill_on_pressure=True,
+)
 
 # config name -> EngineConfig kwargs; every reuse row plans with the
 # unconditional-reuse planner so the ablation isolates the execute-side
@@ -31,9 +46,14 @@ CONFIGS: Dict[str, dict] = {
     "paper+overlap": dict(overlap_load=True),
     "paper+hedge": dict(hedge=HedgePolicy(threshold_s=0.8)),
     "paper+prefetch": dict(prefetch_lookahead=4),
+    "paper+tiers": dict(**_HIERARCHY),
     "beyond(all)": dict(
         compress_tier="io2", overlap_load=True,
         hedge=HedgePolicy(threshold_s=0.8), prefetch_lookahead=4,
+    ),
+    "beyond+tiers": dict(
+        overlap_load=True, hedge=HedgePolicy(threshold_s=0.8),
+        prefetch_lookahead=4, **_HIERARCHY,
     ),
 }
 

@@ -1,9 +1,14 @@
 """Paper §2 Insights table: break-even reuse count N*, storage-cost fraction,
 and the simplified-ratio approximation quality — extended beyond the paper
-across the assigned architectures, storage tiers and int8 compression."""
+across the assigned architectures, storage tiers and int8 compression.
+
+    PYTHONPATH=src python benchmarks/breakeven.py [--archs a,b] [--context N]
+
+(--archs/--context cap the sweep; the CI smoke job runs a small slice.)"""
 from __future__ import annotations
 
-from typing import List
+import argparse
+from typing import List, Optional, Sequence
 
 from repro.configs import get_config
 from repro.core.cost_model import (
@@ -18,11 +23,13 @@ ARCHS = (
 )
 
 
-def table(L_context: int = 10_000) -> List[dict]:
+def table(
+    L_context: int = 10_000, archs: Optional[Sequence[str]] = None
+) -> List[dict]:
     w = Workload(L_context=L_context, L_prompt=32, L_output=32, N=5)
     pm_paper = PerfModel(V100_X4_HF)
     rows = []
-    for arch in ARCHS:
+    for arch in archs or ARCHS:
         cfg = get_config(arch)
         for tier_name in ("io2", "gp3", "s3"):
             for comp in (1.0, 0.5):
@@ -59,7 +66,13 @@ def run() -> List[str]:
 
 
 if __name__ == "__main__":
-    for r in table():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated subset (default: all)")
+    ap.add_argument("--context", type=int, default=10_000)
+    args = ap.parse_args()
+    archs = args.archs.split(",") if args.archs else None
+    for r in table(L_context=args.context, archs=archs):
         print(
             f"{r['arch']:22s} {r['tier']:4s} comp={r['compression']:.1f} "
             f"N*={str(r['break_even_N']):>5s} ratio@N5={r['ratio_N5']:.2f}x "

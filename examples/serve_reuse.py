@@ -1,15 +1,19 @@
 """End-to-end serving driver (the paper's evaluation, live).
 
 Replays a TriviaQA-like context-sharing workload (many requests share long
-contexts) through the continuous-batching engine in all three policies:
+contexts) through the continuous-batching engine in four policies:
 
   recompute  — the paper's text-recomputation baseline
   paper      — cost-model-gated store/load (the paper's pipeline)
   beyond     — + int8 storage tier + prefetch overlap + hedged loads
                (the beyond-paper optimizations, DESIGN.md §3)
+  hierarchy  — + the full tier hierarchy (host_dram -> local_nvme -> s3),
+               write-backs land hot, break-even migration demotes cold
+               entries, the s3 link is concurrency-limited
 
 Real compute (reduced llama on CPU), paper-scale economics
 (EngineConfig.cost_arch="llama-7b", V100/HF-MP perf model, AWS pricing).
+Ends with the per-request SLO audit of the hierarchy run (serving/audit.py).
 
     PYTHONPATH=src python examples/serve_reuse.py [--requests 24] [--arch llama-7b]
 """
@@ -21,9 +25,13 @@ from repro.configs import get_config, reduced_config
 from repro.core.perf_model import PerfModel, V100_X4_HF
 from repro.core.pricing import AWS_PAPER
 from repro.data.synthetic import WorkloadSpec, serving_workload
+from repro.kvcache.hierarchy import TierSpec
 from repro.models import registry
 from repro.serving import CostAwarePlanner, EngineConfig, Request, ServingEngine
+from repro.serving import audit as audit_mod
 from repro.serving.scheduler import HedgePolicy
+
+MODES = ("recompute", "paper", "beyond", "hierarchy")
 
 
 def build_engine(cfg, params, mode: str, cost_arch: str):
@@ -35,6 +43,20 @@ def build_engine(cfg, params, mode: str, cost_arch: str):
     elif mode == "beyond":
         ec = EngineConfig(
             compress_tier="io2", overlap_load=True,
+            hedge=HedgePolicy(threshold_s=0.8, parallelism=2),
+            prefetch_lookahead=4, **common,
+        )
+    elif mode == "hierarchy":
+        ec = EngineConfig(
+            tier_specs=[
+                TierSpec("host_dram", 64.0),
+                TierSpec("local_nvme", 512.0),
+                TierSpec("s3", 4096.0, concurrency=2),
+            ],
+            store_tier="host_dram",  # write-backs land hot...
+            migration_interval_s=5.0,  # ...break-even math demotes the cold
+            spill_on_pressure=True,
+            overlap_load=True,
             hedge=HedgePolicy(threshold_s=0.8, parallelism=2),
             prefetch_lookahead=4, **common,
         )
@@ -70,22 +92,32 @@ def main():
     print(f"{'policy':10s} {'hits':>5s} {'cost $':>9s} {'TTFT s':>8s} "
           f"{'p99 e2e s':>10s} {'storage %':>10s}")
     results = {}
-    for mode in ("recompute", "paper", "beyond"):
+    for mode in MODES:
         eng = build_engine(cfg, params, mode, args.arch)
-        for r in reqs:
-            eng.submit(Request(**r.__dict__))
-        s = eng.run()
-        results[mode] = (s, {rec.req_id: rec.tokens for rec in eng.records})
+        requests = [Request(**r.__dict__) for r in reqs]
+        for r in requests:
+            eng.submit(r)
+        events = list(eng.drain())
+        s = eng.summary()
+        results[mode] = (s, {rec.req_id: rec.tokens for rec in eng.records},
+                         events, requests)
         frac = 100 * s.storage_cost / max(s.total_cost, 1e-12)
         print(f"{mode:10s} {s.reuse_hits:5d} {s.total_cost:9.4f} "
               f"{s.mean_ttft_s:8.3f} {s.p99_e2e_s:10.3f} {frac:10.3f}")
 
     base = results["recompute"][0]
-    for mode in ("paper", "beyond"):
+    for mode in MODES[1:]:
         s = results[mode][0]
         print(f"\n{mode}: {base.total_cost/s.total_cost:.2f}x cheaper, "
               f"{base.mean_ttft_s/s.mean_ttft_s:.2f}x faster TTFT vs recompute; "
               f"tokens identical: {results[mode][1] == results['recompute'][1]}")
+
+    # fold the hierarchy run's event stream into the per-request SLO audit
+    _, _, events, requests = results["hierarchy"]
+    rows = audit_mod.audit(events, requests)
+    print("\nSLO audit (hierarchy run):")
+    print(audit_mod.format_table(rows))
+    print(f"summary: {audit_mod.slo_summary(rows)}")
 
 
 if __name__ == "__main__":

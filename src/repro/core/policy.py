@@ -72,6 +72,9 @@ def decide(
     *,
     available: Dict[str, float],  # tier name -> matched prefix fraction [0,1]
     compression: float = 1.0,
+    # tier name -> predicted queueing delay on that tier's contended link;
+    # folded into the tier's TTFT estimate (empty/absent = uncontended).
+    queue_wait_s: Optional[Dict[str, float]] = None,
 ) -> Decision:
     """Choose the cheapest SLO-satisfying plan for one request."""
     options: List[Decision] = []
@@ -96,12 +99,13 @@ def decide(
         dk = cost_model.delay_kv(
             cfg, w, perf, tier=tier, compression=compression, reused_fraction=frac
         )
+        wait = (queue_wait_s or {}).get(tier_name, 0.0)
         options.append(
             Decision(
                 action="load" if frac >= 1.0 else "partial",
                 tier=tier_name,
                 reused_fraction=frac,
-                est_ttft_s=dk.ttft_s,
+                est_ttft_s=dk.ttft_s + wait,
                 est_cost=_marginal_request_cost(
                     cfg, w, pricing, perf, tier=tier, reused_fraction=frac
                 ),

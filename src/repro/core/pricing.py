@@ -96,10 +96,35 @@ HOST_DRAM = StorageTier(
     write_bw_gbps=32.0,
     latency_s=1e-5,
 )
+LOCAL_NVME = StorageTier(
+    # Instance-store NVMe (i4i-class): bundled with the instance, priced at
+    # the marginal $/GB share of the instance-store premium.  The hierarchy's
+    # spill tier between host DRAM and provisioned cloud block storage.
+    name="local_nvme",
+    cost_per_gb_month=0.054,
+    read_bw_gbps=7.0,
+    write_bw_gbps=5.0,
+    latency_s=1e-4,
+)
+PEER_DRAM = StorageTier(
+    # DRAM of a peer serving instance reached over the datacenter network
+    # (the "Can I Buy Your KV Cache?" setting): DRAM-priced capacity behind a
+    # 100 GbE NIC; RpcBackend adds per-call RPC round trips on top.
+    name="peer_dram",
+    cost_per_gb_month=2.0,
+    read_bw_gbps=12.5,
+    write_bw_gbps=12.5,
+    latency_s=2e-4,
+)
+
+_ALL_TIERS = {
+    "io2": IO2, "gp3": GP3, "s3": S3_STANDARD, "host_dram": HOST_DRAM,
+    "local_nvme": LOCAL_NVME, "peer_dram": PEER_DRAM,
+}
 
 AWS_PAPER = Pricing(
     compute=ComputePrice(name="V100(p3.8xlarge)", cost_per_device_hour=3.0, devices=4),
-    tiers={"io2": IO2, "gp3": GP3, "s3": S3_STANDARD, "host_dram": HOST_DRAM},
+    tiers=dict(_ALL_TIERS),
     default_tier="io2",
 )
 
@@ -108,7 +133,7 @@ AWS_PAPER = Pricing(
 # --------------------------------------------------------------------------- #
 TPU_V5E = Pricing(
     compute=ComputePrice(name="TPUv5e-8", cost_per_device_hour=1.20, devices=8),
-    tiers={"io2": IO2, "gp3": GP3, "s3": S3_STANDARD, "host_dram": HOST_DRAM},
+    tiers=dict(_ALL_TIERS),
     default_tier="io2",
 )
 

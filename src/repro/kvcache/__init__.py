@@ -1,9 +1,21 @@
 """Tiered, content-addressed KV/context-state cache (the paper's storage half)."""
-from repro.kvcache import backend, chunks, compression, paged, store, transfer  # noqa: F401
+from repro.kvcache import (  # noqa: F401
+    backend, chunks, compression, hierarchy, paged, store, transfer,
+)
 from repro.kvcache.backend import (  # noqa: F401
     HostMemoryBackend,
     ObjectStoreBackend,
     StorageBackend,
     default_backends,
+)
+from repro.kvcache.hierarchy import (  # noqa: F401
+    BreakEvenMigrator,
+    ConcurrencyLimitedBackend,
+    DiskSpillBackend,
+    RpcBackend,
+    TieredStore,
+    TierMigration,
+    TierSpec,
+    build_backends,
 )
 from repro.kvcache.transfer import TransferHandle  # noqa: F401

@@ -60,11 +60,18 @@ class StorageBackend(Protocol):
 
 
 class _MemoryBackend:
-    """Shared mechanics for the in-process backends: a dict of payloads plus
-    modeled delays from the TransferModel (zero when none is attached)."""
+    """Shared mechanics for the in-process backends: payload storage behind
+    four overridable primitives (``_write``/``_read``/``_drop``/``_has``) plus
+    modeled delays from the TransferModel (zero when none is attached).
+    Subclasses that keep bytes elsewhere (e.g. ``hierarchy.DiskSpillBackend``)
+    override only the primitives; the protocol surface and all transfer
+    accounting stay here."""
 
     #: hedged duplicate reads enabled for this backend class
     hedgeable = False
+    #: fixed per-call link overhead (e.g. an RPC round trip), applied to every
+    #: modeled transfer; only meaningful when a TransferModel is attached
+    link_overhead_s = 0.0
 
     def __init__(
         self,
@@ -80,14 +87,38 @@ class _MemoryBackend:
         self.hedge = hedge
         self._data: Dict[str, Tuple[Any, float]] = {}
 
+    # -- storage primitives (override to move bytes elsewhere) ----------- #
+    def _write(self, key: str, payload: Any, nbytes: float) -> None:
+        self._data[key] = (payload, nbytes)
+
+    def _read(self, key: str) -> Tuple[Any, float]:
+        try:
+            return self._data[key]
+        except KeyError:
+            raise KeyError(
+                f"{type(self).__name__} tier {self.name!r} has no payload "
+                f"under key {key!r}"
+            ) from None
+
+    def _drop(self, key: str) -> bool:
+        return self._data.pop(key, None) is not None
+
+    def _has(self, key: str) -> bool:
+        return key in self._data
+
     # -- protocol ------------------------------------------------------- #
     def put(
         self, key: str, payload: Any, nbytes: float, *, charge: bool = True
     ) -> TransferHandle:
-        self._data[key] = (payload, nbytes)
+        if nbytes < 0:
+            raise ValueError(
+                f"nbytes must be >= 0, got {nbytes!r} "
+                f"(tier {self.name!r}, key {key!r})"
+            )
+        self._write(key, payload, nbytes)
         delay = 0.0
         if self.transfer is not None and charge:
-            delay = self.transfer.store_delay(nbytes, self.name)
+            delay = self.transfer.store_delay(nbytes, self.name) + self.link_overhead_s
         return TransferHandle(
             key=key, tier=self.name, kind="store", nbytes=nbytes,
             delay_s=delay, issued_at_s=self.clock.now,
@@ -96,7 +127,7 @@ class _MemoryBackend:
     def get(
         self, key: str, *, nbytes: Optional[float] = None, charge: bool = True
     ) -> Tuple[Any, TransferHandle]:
-        payload, stored_nbytes = self._data[key]
+        payload, stored_nbytes = self._read(key)
         n = stored_nbytes if nbytes is None else nbytes
         delay = 0.0
         if self.transfer is not None:
@@ -104,7 +135,7 @@ class _MemoryBackend:
                 self.transfer.load_delay(n, self.name)
                 if charge
                 else self.transfer.estimate_load_delay(n, self.name)
-            )
+            ) + self.link_overhead_s
         delay = self._hedged(delay)
         handle = TransferHandle(
             key=key, tier=self.name, kind="load", nbytes=n,
@@ -113,18 +144,21 @@ class _MemoryBackend:
         return payload, handle
 
     def delete(self, key: str) -> bool:
-        return self._data.pop(key, None) is not None
+        return self._drop(key)
 
     def contains(self, key: str) -> bool:
-        return key in self._data
+        return self._has(key)
 
     def peek(self, key: str) -> Any:
-        return self._data[key][0]
+        return self._read(key)[0]
 
     def estimate_load_delay(self, nbytes: float) -> float:
         if self.transfer is None:
             return 0.0
-        return self._hedged(self.transfer.estimate_load_delay(nbytes, self.name))
+        return self._hedged(
+            self.transfer.estimate_load_delay(nbytes, self.name)
+            + self.link_overhead_s
+        )
 
     # -- internals ------------------------------------------------------ #
     def _hedged(self, delay_s: float) -> float:

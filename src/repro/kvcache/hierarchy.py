@@ -1,0 +1,732 @@
+"""Tiered KV storage hierarchy: capacity-bounded tiers, contended links, and
+economics-driven migration.
+
+The paper's central claim is that reuse economics hinge on *where* a KV cache
+sits — compute vs. storage vs. network pricing across device/host/disk/object
+tiers.  This module turns the flat two-backend store into an ordered
+hierarchy:
+
+    host_dram  ->  local_nvme  ->  io2 / gp3  ->  s3 / peer_dram
+    (fastest, most expensive $/GB-hour)    (slowest, cheapest)
+
+Pieces:
+
+  * ``TierSpec``                  — declarative tier: capacity, link
+    concurrency limit, backend kind.
+  * ``DiskSpillBackend``          — local-NVMe tier whose payloads actually
+    leave process memory (pickled to files); delays via the TransferModel.
+  * ``RpcBackend``                — modeled remote peer (the "Can I Buy Your
+    KV Cache?" setting): peer-DRAM pricing plus per-call RPC round trips.
+  * ``ConcurrencyLimitedBackend`` — wraps any backend with a k-server link:
+    bursty loads accrue queueing delay on their ``TransferHandle``s
+    (``queue_s``) instead of fetching for free in parallel.
+  * ``TieredStore``               — the store itself: content-addressed trie,
+    per-tier byte/GB-hour accounting, cost-aware eviction, **pinning** (an
+    in-flight prefetch cannot be evicted or demoted), spill-on-pressure, and
+    a clock-driven migration pass.
+  * ``BreakEvenMigrator``         — promotion/demotion policy from the
+    paper's break-even math: an entry belongs in the tier minimizing
+    ``hold $/h + reuse_freq x (GPU-idle $ per fetch + per-GB fees)``.
+  * ``TierMigration``             — typed record of one migration, consumed
+    by the serving engine's ``TierMigrated`` event.
+
+``kvcache.store.ContextStore`` is a thin backward-compatible wrapper over
+``TieredStore``; with a single-tier hierarchy, no concurrency limits, and no
+migration policy the two are behaviorally identical (golden-parity tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import heapq
+import itertools
+import pathlib
+import pickle
+import shutil
+import tempfile
+import weakref
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.pricing import GB, Pricing
+from repro.kvcache import compression
+from repro.kvcache.backend import (
+    HostMemoryBackend,
+    ObjectStoreBackend,
+    StorageBackend,
+    _MemoryBackend,
+)
+from repro.kvcache.chunks import ChunkTrie, PrefixMatch
+from repro.kvcache.transfer import SimClock, TransferModel
+
+# Storage rate assumed by eviction/migration scoring when no Pricing is
+# plumbed in (io2's ~$0.125/GB-month); callers with real catalogs pass
+# ``pricing=``.
+_FALLBACK_GB_HOUR_RATE = 1.7e-4
+
+
+# --------------------------------------------------------------------------- #
+# Tier declaration
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One level of the hierarchy, fastest-first in the store's tier list."""
+
+    name: str
+    capacity_gb: float
+    # Max simultaneous transfers on this tier's link; None = uncontended.
+    concurrency: Optional[int] = None
+    # Backend kind override: "host" | "disk" | "rpc" | "object".
+    # Default is inferred from the tier name.
+    backend: Optional[str] = None
+
+
+def _default_kind(name: str) -> str:
+    if name == "host_dram":
+        return "host"
+    if name == "local_nvme":
+        return "disk"
+    if name.startswith(("peer", "rpc")):
+        return "rpc"
+    return "object"
+
+
+# --------------------------------------------------------------------------- #
+# New backends
+# --------------------------------------------------------------------------- #
+class DiskSpillBackend(_MemoryBackend):
+    """Local-NVMe spill tier: payloads genuinely leave process memory
+    (pickled to files under ``root``); transfer delays are modeled from the
+    ``local_nvme`` pricing tier like any other backend."""
+
+    hedgeable = False  # local device: no straggler tail to hedge
+
+    def __init__(self, name: str = "local_nvme", *, root=None, **kw):
+        super().__init__(name, **kw)
+        if root is not None:
+            self.root = pathlib.Path(root)
+            self.root.mkdir(parents=True, exist_ok=True)
+        else:
+            # we own the default spill dir: reclaim it when the backend dies
+            self.root = pathlib.Path(tempfile.mkdtemp(prefix=f"kvspill-{name}-"))
+            weakref.finalize(self, shutil.rmtree, str(self.root), True)
+        self._nbytes: Dict[str, float] = {}
+
+    def _path(self, key: str) -> pathlib.Path:
+        return self.root / (hashlib.sha1(key.encode()).hexdigest() + ".pkl")
+
+    # -- storage primitives --------------------------------------------- #
+    def _write(self, key: str, payload: Any, nbytes: float) -> None:
+        with open(self._path(key), "wb") as f:
+            pickle.dump(payload, f)
+        self._nbytes[key] = nbytes
+
+    def _read(self, key: str) -> Tuple[Any, float]:
+        if key not in self._nbytes:
+            raise KeyError(
+                f"{type(self).__name__} tier {self.name!r} has no payload "
+                f"under key {key!r}"
+            )
+        with open(self._path(key), "rb") as f:
+            return pickle.load(f), self._nbytes[key]
+
+    def _drop(self, key: str) -> bool:
+        if self._nbytes.pop(key, None) is None:
+            return False
+        self._path(key).unlink(missing_ok=True)
+        return True
+
+    def _has(self, key: str) -> bool:
+        return key in self._nbytes
+
+    def clear(self) -> None:
+        for key in list(self._nbytes):
+            self._drop(key)
+
+
+class RpcBackend(_MemoryBackend):
+    """Modeled remote-peer tier (a sibling serving instance selling its KV
+    cache): bytes priced/timed as ``peer_dram`` through the shared
+    TransferModel, plus a fixed RPC round trip per call.  Remote reads have a
+    straggler tail, so hedging applies."""
+
+    hedgeable = True
+
+    def __init__(self, name: str = "peer_dram", *, rtt_s: float = 2e-4, **kw):
+        super().__init__(name, **kw)
+        self.rtt_s = rtt_s
+        self.link_overhead_s = rtt_s
+
+
+class ConcurrencyLimitedBackend:
+    """k-server link in front of any backend: at most ``limit`` transfers are
+    in flight at once; excess transfers wait for the earliest free slot, and
+    the wait is carried on the handle (``queue_s``, included in ``delay_s``).
+
+    Reservations are keyed to the shared SimClock, so a burst of fetches
+    issued at the same instant queue behind each other — the "fetching for
+    free in parallel" failure mode of the uncontended model."""
+
+    def __init__(self, inner: StorageBackend, limit: int, *, clock: Optional[SimClock] = None):
+        assert limit >= 1, limit
+        self.inner = inner
+        self.limit = int(limit)
+        self.clock = clock or inner.clock
+        self._busy_until: List[float] = []  # min-heap of in-flight completions
+
+    # -- queueing ------------------------------------------------------- #
+    def _prune(self, now: float) -> None:
+        while self._busy_until and self._busy_until[0] <= now:
+            heapq.heappop(self._busy_until)
+
+    def _wait(self, now: float) -> float:
+        """Wait until a server frees (0 if one is free now)."""
+        self._prune(now)
+        if len(self._busy_until) < self.limit:
+            return 0.0
+        k = len(self._busy_until) - self.limit + 1
+        return max(0.0, heapq.nsmallest(k, self._busy_until)[-1] - now)
+
+    def _reserve(self, service_s: float) -> float:
+        now = self.clock.now
+        wait = self._wait(now)
+        heapq.heappush(self._busy_until, now + wait + service_s)
+        return wait
+
+    def estimated_wait(self, nbytes: float) -> float:
+        """Predicted queueing delay for a fetch issued now (no reservation) —
+        the planning/economics surface."""
+        return self._wait(self.clock.now)
+
+    def in_flight(self) -> int:
+        self._prune(self.clock.now)
+        return len(self._busy_until)
+
+    # -- StorageBackend protocol (delegate + queue) ---------------------- #
+    @property
+    def name(self) -> str:
+        return self.inner.name
+
+    def put(self, key, payload, nbytes, *, charge: bool = True):
+        h = self.inner.put(key, payload, nbytes, charge=charge)
+        wait = self._reserve(h.delay_s)
+        if wait == 0.0:
+            return h
+        return dataclasses.replace(h, delay_s=h.delay_s + wait, queue_s=wait)
+
+    def get(self, key, *, nbytes=None, charge: bool = True):
+        payload, h = self.inner.get(key, nbytes=nbytes, charge=charge)
+        wait = self._reserve(h.delay_s)
+        if wait == 0.0:
+            return payload, h
+        return payload, dataclasses.replace(h, delay_s=h.delay_s + wait, queue_s=wait)
+
+    def delete(self, key) -> bool:
+        return self.inner.delete(key)
+
+    def contains(self, key) -> bool:
+        return self.inner.contains(key)
+
+    def peek(self, key):
+        return self.inner.peek(key)
+
+    def estimate_load_delay(self, nbytes: float) -> float:
+        return self.inner.estimate_load_delay(nbytes)
+
+    def __getattr__(self, attr):
+        inner = self.__dict__.get("inner")
+        if inner is None:
+            raise AttributeError(attr)
+        return getattr(inner, attr)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"ConcurrencyLimited({self.inner!r}, limit={self.limit})"
+
+
+_BACKEND_KINDS = {
+    "host": HostMemoryBackend,
+    "disk": DiskSpillBackend,
+    "rpc": RpcBackend,
+    "object": ObjectStoreBackend,
+}
+
+
+def build_backends(
+    specs: Sequence[TierSpec],
+    *,
+    transfer: Optional[TransferModel] = None,
+    clock: Optional[SimClock] = None,
+    hedge=None,
+) -> Dict[str, StorageBackend]:
+    """One backend per TierSpec: kind by name (host_dram -> host memory,
+    local_nvme -> disk spill, peer*/rpc* -> RPC peer, else object store),
+    hedging only where a straggler tail exists, concurrency-limit wrapped
+    when the spec bounds the link."""
+    out: Dict[str, StorageBackend] = {}
+    for spec in specs:
+        cls = _BACKEND_KINDS[spec.backend or _default_kind(spec.name)]
+        b = cls(
+            spec.name, transfer=transfer, clock=clock,
+            hedge=hedge if cls.hedgeable else None,
+        )
+        if spec.concurrency is not None:
+            b = ConcurrencyLimitedBackend(b, spec.concurrency, clock=b.clock)
+        out[spec.name] = b
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Store records
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class StoredEntry:
+    entry_id: str
+    chain: List[str]
+    n_tokens: int
+    nbytes: int
+    compressed: bool
+    tier: str
+    created_s: float
+    last_used_s: float
+    uses: int = 0
+    # $ saved per reuse (prefill skipped) — set by the caller for cost-aware
+    # eviction scoring.
+    saved_per_use: float = 0.0
+    # pin count: >0 means an in-flight prefetch or planned fetch depends on
+    # this entry — it must not be evicted, demoted, or promoted.
+    pins: int = 0
+
+
+@dataclasses.dataclass
+class TierState:
+    name: str
+    capacity_bytes: float
+    used_bytes: float = 0.0
+    gb_hours: float = 0.0
+    _last_accrual_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TierMigration:
+    """One completed tier movement, emitted by the migration/spill machinery
+    (the engine wraps these into ``TierMigrated`` events)."""
+
+    t_s: float
+    entry_id: str
+    from_tier: str
+    to_tier: str
+    nbytes: float
+    reason: str  # "promote" | "demote" | "spill"
+
+
+# --------------------------------------------------------------------------- #
+# Migration policy: the paper's break-even math per tier
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class BreakEvenMigrator:
+    """Place each entry in the tier that minimizes its total $/hour:
+
+        rate(tier) = hold + reuse_freq * fetch
+        hold       = $/GB-hour(tier) * entry_GB
+        fetch      = c_GPU * load_delay(tier, nbytes)  +  per-GB fees
+
+    i.e. the storage-tier delta must be justified by reuse frequency times
+    fetch savings — the paper's break-even inequality generalized from
+    "store vs recompute" to "which tier".  Hot entries (high freq) promote
+    toward DRAM; cold ones demote toward object storage, strictly lowering
+    the storage $/hour they accrue."""
+
+    # GPU-second price used to convert fetch delay into $; resolved from the
+    # store's Pricing when None.
+    compute_cost_per_s: Optional[float] = None
+    # Hysteresis: move only if it saves at least this many $/hour.
+    min_savings_per_hour: float = 0.0
+    # Entries younger than this never migrate (their reuse frequency is not
+    # yet informative).
+    min_residency_s: float = 0.0
+
+    def tier_rate(self, store: "TieredStore", e: StoredEntry, tier: str, freq_per_h: float) -> float:
+        hold = store._gb_hour_rate(tier) * e.nbytes / GB
+        c_gpu = self.compute_cost_per_s
+        if c_gpu is None:
+            c_gpu = (
+                store.pricing.compute.cost_per_hour / 3600.0
+                if store.pricing is not None
+                else 0.0
+            )
+        fetch = c_gpu * store.backends[tier].estimate_load_delay(e.nbytes)
+        if store.pricing is not None and tier in store.pricing.tiers:
+            fetch += store.pricing.tiers[tier].per_gb_transfer_fee * e.nbytes / GB
+        return hold + freq_per_h * fetch
+
+    def target(self, store: "TieredStore", e: StoredEntry) -> Optional[str]:
+        """Best tier for ``e`` (None = stay put)."""
+        now = store.clock.now
+        if now - e.created_s < self.min_residency_s:
+            return None
+        age_h = max((now - e.created_s) / 3600.0, 1e-9)
+        freq = e.uses / age_h
+        current = self.tier_rate(store, e, e.tier, freq)
+        best_tier, best = e.tier, current
+        for t in store.tier_order:
+            if t == e.tier:
+                continue
+            r = self.tier_rate(store, e, t, freq)
+            if r < best:
+                best_tier, best = t, r
+        if best_tier != e.tier and current - best > self.min_savings_per_hour:
+            return best_tier
+        return None
+
+
+# --------------------------------------------------------------------------- #
+# The tiered store
+# --------------------------------------------------------------------------- #
+class TieredStore:
+    """Multi-tier, content-addressed store for per-context model state.
+
+    Owns *what* is stored — tier metadata, the chain-hash trie
+    (``chunks.ChunkTrie``), capacity/GB-hour accounting, pinning, and the
+    cost-aware eviction/migration economics — while the bytes live in
+    pluggable ``StorageBackend``s, one per tier, ordered fastest-first."""
+
+    def __init__(
+        self,
+        *,
+        tiers: Optional[Sequence[TierSpec]] = None,
+        tier_capacities_gb: Optional[Dict[str, float]] = None,
+        transfer: Optional[TransferModel] = None,
+        clock: Optional[SimClock] = None,
+        chunk_tokens: int = 256,
+        compress_tier: Optional[str] = None,  # entries entering this tier are int8
+        eviction: str = "cost",  # "cost" | "lru"
+        backends: Optional[Dict[str, StorageBackend]] = None,
+        pricing: Optional[Pricing] = None,
+        migration: Optional[BreakEvenMigrator] = None,
+        spill_on_pressure: bool = False,
+        hedge=None,
+    ):
+        if tiers is None:
+            assert tier_capacities_gb is not None, (
+                "TieredStore needs tiers=[TierSpec...] or tier_capacities_gb={...}"
+            )
+            tiers = [TierSpec(n, gb) for n, gb in tier_capacities_gb.items()]
+        self.specs: Dict[str, TierSpec] = {s.name: s for s in tiers}
+        self.tiers: Dict[str, TierState] = {
+            s.name: TierState(s.name, s.capacity_gb * GB) for s in tiers
+        }
+        self.tier_order = [s.name for s in tiers]  # fastest first
+        self.transfer = transfer
+        self.clock = clock or SimClock()
+        self.backends: Dict[str, StorageBackend] = backends or build_backends(
+            tiers, transfer=transfer, clock=self.clock, hedge=hedge
+        )
+        missing = set(self.tier_order) - set(self.backends)
+        assert not missing, f"tiers without a backend: {sorted(missing)}"
+        self.pricing = pricing
+        self.trie = ChunkTrie(chunk_tokens)
+        self.entries: Dict[str, StoredEntry] = {}
+        self.compress_tier = compress_tier
+        self.eviction = eviction
+        self.migration = migration
+        self.spill_on_pressure = spill_on_pressure
+        self.migration_log: List[TierMigration] = []
+        self._ids = itertools.count()
+        self.evictions = 0
+        self.rejected_puts = 0
+
+    # ------------------------------------------------------------------ #
+    # Accounting
+    # ------------------------------------------------------------------ #
+    def _accrue(self) -> None:
+        now = self.clock.now
+        for t in self.tiers.values():
+            dt_h = max(0.0, now - t._last_accrual_s) / 3600.0
+            t.gb_hours += (t.used_bytes / GB) * dt_h
+            t._last_accrual_s = now
+
+    def storage_cost(self, pricing: Pricing) -> float:
+        self._accrue()
+        return sum(
+            pricing.tier(t.name).cost_per_gb_hour * t.gb_hours
+            for t in self.tiers.values()
+            if t.name in pricing.tiers
+        )
+
+    def storage_rate_per_hour(self) -> float:
+        """Instantaneous $/hour the currently resident bytes accrue."""
+        return sum(
+            self._gb_hour_rate(t.name) * t.used_bytes / GB
+            for t in self.tiers.values()
+        )
+
+    # ------------------------------------------------------------------ #
+    # Pinning
+    # ------------------------------------------------------------------ #
+    def pin(self, entry_id: str) -> None:
+        """Protect an entry from eviction/demotion until ``unpin`` (in-flight
+        prefetches and planned fetches)."""
+        try:
+            self.entries[entry_id].pins += 1
+        except KeyError:
+            raise KeyError(f"cannot pin unknown entry {entry_id!r}") from None
+
+    def unpin(self, entry_id: str) -> bool:
+        e = self.entries.get(entry_id)
+        if e is None:
+            return False
+        e.pins = max(0, e.pins - 1)
+        return True
+
+    def pinned(self, entry_id: str) -> bool:
+        e = self.entries.get(entry_id)
+        return e is not None and e.pins > 0
+
+    # ------------------------------------------------------------------ #
+    # Write path
+    # ------------------------------------------------------------------ #
+    def put(
+        self,
+        tokens: Sequence[int],
+        artifact: Any,
+        *,
+        tier: str,
+        saved_per_use: float = 0.0,
+        sync: bool = False,
+    ) -> Tuple[Optional[str], float]:
+        """Store a context artifact.  Returns (entry_id | None, write_delay_s).
+        Async writes (default) overlap serving: delay is charged to the link
+        stats but not to the caller.  Under capacity pressure, space is made
+        by spilling the least valuable entries one tier down
+        (``spill_on_pressure``) or evicting them."""
+        self._accrue()
+        ts = self.tiers[tier]
+        compressed = tier == self.compress_tier
+        if compressed:
+            artifact = compression.compress_tree(artifact)
+        nbytes = compression.tree_nbytes(artifact)
+
+        if nbytes > ts.capacity_bytes or not self._ensure_room(tier, nbytes):
+            self.rejected_puts += 1
+            return None, 0.0
+
+        entry_id = f"ctx{next(self._ids)}"
+        chain = self.trie.insert(tokens, entry_id)
+        if not chain:  # context shorter than one chunk: not storable
+            self.rejected_puts += 1
+            return None, 0.0
+        e = StoredEntry(
+            entry_id=entry_id,
+            chain=chain,
+            n_tokens=len(chain) * self.trie.chunk_tokens,
+            nbytes=nbytes,
+            compressed=compressed,
+            tier=tier,
+            created_s=self.clock.now,
+            last_used_s=self.clock.now,
+            saved_per_use=saved_per_use,
+        )
+        self.entries[entry_id] = e
+        ts.used_bytes += nbytes
+        handle = self.backends[tier].put(entry_id, artifact, nbytes)
+        return entry_id, (handle.delay_s if sync else 0.0)
+
+    # ------------------------------------------------------------------ #
+    # Read path
+    # ------------------------------------------------------------------ #
+    def lookup(self, tokens: Sequence[int]) -> Tuple[PrefixMatch, Optional[StoredEntry]]:
+        m = self.trie.longest_prefix(tokens)
+        return m, (self.entries.get(m.entry_id) if m.entry_id else None)
+
+    def fetch(
+        self, entry_id: str, *, fraction: float = 1.0, nbytes: Optional[float] = None
+    ) -> Tuple[Any, float]:
+        """Load an artifact (optionally a prefix fraction of its bytes for
+        partial attention-KV reuse).  ``nbytes`` overrides the billed byte
+        count (economics-at-scale: charge the full arch's KV bytes and occupy
+        the link accordingly).  Returns (decompressed artifact, delay_s) —
+        the delay includes any queueing on a concurrency-limited link."""
+        self._accrue()
+        e = self.entries[entry_id]
+        e.uses += 1
+        e.last_used_s = self.clock.now
+        if nbytes is None:
+            nbytes = e.nbytes * max(0.0, min(1.0, fraction))
+        payload, handle = self.backends[e.tier].get(entry_id, nbytes=nbytes)
+        art = compression.decompress_tree(payload) if e.compressed else payload
+        return art, handle.delay_s
+
+    def estimate_load_delay(self, tier: str, nbytes: float) -> float:
+        """Backend-modeled (hedged) read delay for ``nbytes`` from ``tier``,
+        charging nothing — the prefetch/economics planning surface."""
+        return self.backends[tier].estimate_load_delay(nbytes)
+
+    def estimated_queue_wait(self, tier: str, nbytes: float) -> float:
+        """Predicted queueing delay on ``tier``'s link right now (0 for
+        uncontended links)."""
+        fn = getattr(self.backends[tier], "estimated_wait", None)
+        return fn(nbytes) if fn is not None else 0.0
+
+    # ------------------------------------------------------------------ #
+    # Tier movement / eviction / migration
+    # ------------------------------------------------------------------ #
+    def _tier_index(self, tier: str) -> int:
+        return self.tier_order.index(tier)
+
+    def _next_tier_down(self, tier: str) -> Optional[str]:
+        i = self._tier_index(tier)
+        return self.tier_order[i + 1] if i + 1 < len(self.tier_order) else None
+
+    def _transformed(self, e: StoredEntry, to_tier: str) -> Tuple[Any, float, bool]:
+        """(payload, nbytes, compressed) as they would be after moving ``e``
+        to ``to_tier``: compressed entering the int8 tier, decompressed
+        leaving it — the size the destination must actually absorb."""
+        payload = self.backends[e.tier].peek(e.entry_id)
+        if to_tier == self.compress_tier and not e.compressed:
+            p = compression.compress_tree(payload)
+            return p, compression.tree_nbytes(p), True
+        if e.compressed and to_tier != self.compress_tier:
+            p = compression.decompress_tree(payload)
+            return p, compression.tree_nbytes(p), False
+        return payload, e.nbytes, e.compressed
+
+    def _move(self, entry_id: str, to_tier: str, *, reason: str) -> Optional[TierMigration]:
+        """Move an entry between tiers (uncharged link bytes: migration, not a
+        serving write).  Compresses entering the int8 tier, decompresses
+        leaving it.  Refuses pinned entries and full destinations."""
+        e = self.entries.get(entry_id)
+        if e is None or e.tier == to_tier or e.pins > 0:
+            return None
+        new_payload, new_nbytes, new_compressed = self._transformed(e, to_tier)
+        dst = self.tiers[to_tier]
+        if dst.used_bytes + new_nbytes > dst.capacity_bytes:
+            return None
+        self._accrue()
+        from_tier = e.tier
+        self.backends[from_tier].delete(entry_id)
+        self.tiers[from_tier].used_bytes -= e.nbytes
+        e.tier, e.nbytes, e.compressed = to_tier, new_nbytes, new_compressed
+        dst.used_bytes += new_nbytes
+        self.backends[to_tier].put(entry_id, new_payload, new_nbytes, charge=False)
+        mig = TierMigration(
+            t_s=self.clock.now, entry_id=entry_id, from_tier=from_tier,
+            to_tier=to_tier, nbytes=new_nbytes, reason=reason,
+        )
+        self.migration_log.append(mig)
+        return mig
+
+    def demote(self, entry_id: str, to_tier: str) -> bool:
+        return self._move(entry_id, to_tier, reason="demote") is not None
+
+    def promote(self, entry_id: str, to_tier: str) -> bool:
+        return self._move(entry_id, to_tier, reason="promote") is not None
+
+    def run_migrations(self) -> List[TierMigration]:
+        """Clock-driven migration pass: apply the bound policy to every
+        unpinned entry.  Demotions run first (freeing hot-tier capacity for
+        the promotions), then promotions."""
+        if self.migration is None:
+            return []
+        self._accrue()
+        moves: List[Tuple[StoredEntry, str]] = []
+        for e in list(self.entries.values()):
+            if e.pins > 0:
+                continue
+            tgt = self.migration.target(self, e)
+            if tgt is not None:
+                moves.append((e, tgt))
+        done: List[TierMigration] = []
+        # sort by direction: deepest demotions first, promotions last
+        moves.sort(
+            key=lambda m: self._tier_index(m[1]) - self._tier_index(m[0].tier),
+            reverse=True,
+        )
+        for e, tgt in moves:
+            reason = (
+                "demote" if self._tier_index(tgt) > self._tier_index(e.tier)
+                else "promote"
+            )
+            mig = self._move(e.entry_id, tgt, reason=reason)
+            if mig is not None:
+                done.append(mig)
+        return done
+
+    def drain_migrations(self) -> List[TierMigration]:
+        """Pop-and-return every migration (policy passes AND pressure spills)
+        since the last drain — the engine's event source."""
+        out, self.migration_log = self.migration_log, []
+        return out
+
+    def _gb_hour_rate(self, tier: str) -> float:
+        if self.pricing is not None and tier in self.pricing.tiers:
+            return self.pricing.tier(tier).cost_per_gb_hour
+        return _FALLBACK_GB_HOUR_RATE
+
+    def _score(self, e: StoredEntry, pricing_rate: float) -> float:
+        """Cost-aware eviction score (higher = keep): $ saved per hour by this
+        entry minus its $ storage rate; LRU mode uses recency only."""
+        if self.eviction == "lru":
+            return e.last_used_s
+        age_h = max((self.clock.now - e.created_s) / 3600.0, 1e-6)
+        save_rate = e.saved_per_use * e.uses / age_h
+        hold_rate = pricing_rate * e.nbytes / GB
+        return save_rate - hold_rate
+
+    def _victim(self, tier: str) -> Optional[StoredEntry]:
+        cands = [
+            e for e in self.entries.values() if e.tier == tier and e.pins == 0
+        ]
+        if not cands:
+            return None
+        rate = self._gb_hour_rate(tier)
+        return min(cands, key=lambda e: self._score(e, pricing_rate=rate))
+
+    def _ensure_room(self, tier: str, nbytes: float) -> bool:
+        ts = self.tiers[tier]
+        if nbytes > ts.capacity_bytes:
+            return False  # can never fit: don't evict anything chasing it
+        while ts.used_bytes + nbytes > ts.capacity_bytes:
+            if not self._spill_or_evict_one(tier):
+                return False
+        return True
+
+    def _spill_or_evict_one(self, tier: str) -> bool:
+        """Free space in ``tier``: preferably by demoting its least valuable
+        unpinned entry one level down (``spill_on_pressure``), else by
+        evicting it."""
+        if self.spill_on_pressure:
+            nxt = self._next_tier_down(tier)
+            victim = self._victim(tier)
+            if nxt is not None and victim is not None:
+                # size the destination for the POST-move bytes: leaving the
+                # int8 tier decompresses the entry to several times its
+                # current footprint
+                _, need, _ = self._transformed(victim, nxt)
+                if self._ensure_room(nxt, need):
+                    if self._move(victim.entry_id, nxt, reason="spill") is not None:
+                        return True
+        return self._evict_one(tier)
+
+    def _evict_one(self, tier: str) -> bool:
+        victim = self._victim(tier)
+        if victim is None:
+            return False
+        self.trie.remove(victim.chain, victim.entry_id)
+        self.tiers[tier].used_bytes -= victim.nbytes
+        self.backends[tier].delete(victim.entry_id)
+        del self.entries[victim.entry_id]
+        self.evictions += 1
+        return True
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> Dict[str, Any]:
+        self._accrue()
+        return {
+            "entries": len(self.entries),
+            "evictions": self.evictions,
+            "rejected_puts": self.rejected_puts,
+            "migrations": len(self.migration_log),
+            "tiers": {
+                n: {"used_gb": t.used_bytes / GB, "gb_hours": t.gb_hours}
+                for n, t in self.tiers.items()
+            },
+        }

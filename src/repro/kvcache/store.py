@@ -1,248 +1,26 @@
-"""Tiered context-state store: HBM-adjacent host DRAM -> cloud storage.
+"""Tiered context-state store — backward-compatible facade.
 
-The storage half of the paper's system, split along the plan/execute API:
-this module owns *what* is stored — tier metadata, the content-addressed
-chain-hash trie (``chunks.ChunkTrie``), capacity accounting, and the
-cost-aware eviction economics — while the bytes themselves live in pluggable
-``StorageBackend``s (``kvcache.backend``), one per tier.  Entries live in
-exactly one tier and are promoted/demoted/evicted by either LRU or a
-cost-aware score derived from the analytical model (evict the entry whose
-storage $ rate is least justified by its prefill-$ savings rate — the
-paper's economics turned into an eviction policy, a beyond-paper extension).
-"""
+The store implementation lives in ``repro.kvcache.hierarchy``: a
+``TieredStore`` composing capacity-bounded ``StorageBackend``s into an
+ordered hierarchy (host_dram -> local_nvme -> io2/gp3 -> s3/peer_dram) with
+pinning, link concurrency limits, spill-on-pressure, and economics-driven
+promotion/demotion.  ``ContextStore`` is the legacy name, kept as a thin
+wrapper: with a single-tier hierarchy, no concurrency limits, and no
+migration policy it is behaviorally identical to the pre-hierarchy store
+(golden-parity pinned by tests/test_serving.py)."""
 from __future__ import annotations
 
-import dataclasses
-import itertools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
-
-from repro.core.pricing import GB, Pricing
-from repro.kvcache import compression
-from repro.kvcache.backend import StorageBackend, default_backends
-from repro.kvcache.chunks import ChunkTrie, PrefixMatch
-from repro.kvcache.transfer import SimClock, TransferModel
-
-# Storage rate assumed by eviction scoring when no Pricing is plumbed in
-# (io2's ~$0.125/GB-month); callers with real catalogs pass ``pricing=``.
-_FALLBACK_GB_HOUR_RATE = 1.7e-4
+from repro.kvcache.hierarchy import (  # noqa: F401
+    BreakEvenMigrator,
+    StoredEntry,
+    TieredStore,
+    TierMigration,
+    TierSpec,
+    TierState,
+    _FALLBACK_GB_HOUR_RATE,
+)
 
 
-@dataclasses.dataclass
-class StoredEntry:
-    entry_id: str
-    chain: List[str]
-    n_tokens: int
-    nbytes: int
-    compressed: bool
-    tier: str
-    created_s: float
-    last_used_s: float
-    uses: int = 0
-    # $ saved per reuse (prefill skipped) — set by the caller for cost-aware
-    # eviction scoring.
-    saved_per_use: float = 0.0
-
-
-@dataclasses.dataclass
-class TierState:
-    name: str
-    capacity_bytes: float
-    used_bytes: float = 0.0
-    gb_hours: float = 0.0
-    _last_accrual_s: float = 0.0
-
-
-class ContextStore:
-    """Multi-tier, content-addressed store for per-context model state."""
-
-    def __init__(
-        self,
-        *,
-        tier_capacities_gb: Dict[str, float],
-        transfer: Optional[TransferModel] = None,
-        clock: Optional[SimClock] = None,
-        chunk_tokens: int = 256,
-        compress_tier: Optional[str] = None,  # entries entering this tier are int8
-        eviction: str = "cost",  # "cost" | "lru"
-        backends: Optional[Dict[str, StorageBackend]] = None,
-        pricing: Optional[Pricing] = None,
-    ):
-        self.tiers: Dict[str, TierState] = {
-            n: TierState(n, gb * GB) for n, gb in tier_capacities_gb.items()
-        }
-        self.tier_order = list(tier_capacities_gb)  # fastest first
-        self.transfer = transfer
-        self.clock = clock or SimClock()
-        self.backends: Dict[str, StorageBackend] = backends or default_backends(
-            self.tier_order, transfer=transfer, clock=self.clock
-        )
-        missing = set(self.tier_order) - set(self.backends)
-        assert not missing, f"tiers without a backend: {sorted(missing)}"
-        self.pricing = pricing
-        self.trie = ChunkTrie(chunk_tokens)
-        self.entries: Dict[str, StoredEntry] = {}
-        self.compress_tier = compress_tier
-        self.eviction = eviction
-        self._ids = itertools.count()
-        self.evictions = 0
-        self.rejected_puts = 0
-
-    # ------------------------------------------------------------------ #
-    # Accounting
-    # ------------------------------------------------------------------ #
-    def _accrue(self) -> None:
-        now = self.clock.now
-        for t in self.tiers.values():
-            dt_h = max(0.0, now - t._last_accrual_s) / 3600.0
-            t.gb_hours += (t.used_bytes / GB) * dt_h
-            t._last_accrual_s = now
-
-    def storage_cost(self, pricing: Pricing) -> float:
-        self._accrue()
-        return sum(
-            pricing.tier(t.name).cost_per_gb_hour * t.gb_hours
-            for t in self.tiers.values()
-            if t.name in pricing.tiers
-        )
-
-    # ------------------------------------------------------------------ #
-    # Write path
-    # ------------------------------------------------------------------ #
-    def put(
-        self,
-        tokens: Sequence[int],
-        artifact: Any,
-        *,
-        tier: str,
-        saved_per_use: float = 0.0,
-        sync: bool = False,
-    ) -> Tuple[Optional[str], float]:
-        """Store a context artifact.  Returns (entry_id | None, write_delay_s).
-        Async writes (default) overlap serving: delay is charged to the link
-        stats but not to the caller."""
-        self._accrue()
-        ts = self.tiers[tier]
-        compressed = tier == self.compress_tier
-        if compressed:
-            artifact = compression.compress_tree(artifact)
-        nbytes = compression.tree_nbytes(artifact)
-
-        if nbytes > ts.capacity_bytes:
-            self.rejected_puts += 1
-            return None, 0.0
-        while ts.used_bytes + nbytes > ts.capacity_bytes:
-            if not self._evict_one(tier):
-                self.rejected_puts += 1
-                return None, 0.0
-
-        entry_id = f"ctx{next(self._ids)}"
-        chain = self.trie.insert(tokens, entry_id)
-        if not chain:  # context shorter than one chunk: not storable
-            self.rejected_puts += 1
-            return None, 0.0
-        e = StoredEntry(
-            entry_id=entry_id,
-            chain=chain,
-            n_tokens=len(chain) * self.trie.chunk_tokens,
-            nbytes=nbytes,
-            compressed=compressed,
-            tier=tier,
-            created_s=self.clock.now,
-            last_used_s=self.clock.now,
-            saved_per_use=saved_per_use,
-        )
-        self.entries[entry_id] = e
-        ts.used_bytes += nbytes
-        handle = self.backends[tier].put(entry_id, artifact, nbytes)
-        return entry_id, (handle.delay_s if sync else 0.0)
-
-    # ------------------------------------------------------------------ #
-    # Read path
-    # ------------------------------------------------------------------ #
-    def lookup(self, tokens: Sequence[int]) -> Tuple[PrefixMatch, Optional[StoredEntry]]:
-        m = self.trie.longest_prefix(tokens)
-        return m, (self.entries.get(m.entry_id) if m.entry_id else None)
-
-    def fetch(
-        self, entry_id: str, *, fraction: float = 1.0
-    ) -> Tuple[Any, float]:
-        """Load an artifact (optionally a prefix fraction of its bytes for
-        partial attention-KV reuse).  Returns (decompressed artifact, delay_s)."""
-        self._accrue()
-        e = self.entries[entry_id]
-        e.uses += 1
-        e.last_used_s = self.clock.now
-        nbytes = e.nbytes * max(0.0, min(1.0, fraction))
-        payload, handle = self.backends[e.tier].get(entry_id, nbytes=nbytes)
-        art = compression.decompress_tree(payload) if e.compressed else payload
-        return art, handle.delay_s
-
-    def estimate_load_delay(self, tier: str, nbytes: float) -> float:
-        """Backend-modeled (hedged) read delay for ``nbytes`` from ``tier``,
-        charging nothing — the prefetch/economics planning surface."""
-        return self.backends[tier].estimate_load_delay(nbytes)
-
-    # ------------------------------------------------------------------ #
-    # Tier movement / eviction
-    # ------------------------------------------------------------------ #
-    def demote(self, entry_id: str, to_tier: str) -> bool:
-        e = self.entries.get(entry_id)
-        if e is None or e.tier == to_tier:
-            return False
-        dst = self.tiers[to_tier]
-        if dst.used_bytes + e.nbytes > dst.capacity_bytes:
-            return False
-        self._accrue()
-        payload = self.backends[e.tier].peek(entry_id)
-        self.backends[e.tier].delete(entry_id)
-        self.tiers[e.tier].used_bytes -= e.nbytes
-        if to_tier == self.compress_tier and not e.compressed:
-            payload = compression.compress_tree(payload)
-            e.compressed = True
-            e.nbytes = compression.tree_nbytes(payload)
-        e.tier = to_tier
-        dst.used_bytes += e.nbytes
-        # tier migration, not a serving write: bytes move uncharged
-        self.backends[to_tier].put(entry_id, payload, e.nbytes, charge=False)
-        return True
-
-    def _gb_hour_rate(self, tier: str) -> float:
-        if self.pricing is not None and tier in self.pricing.tiers:
-            return self.pricing.tier(tier).cost_per_gb_hour
-        return _FALLBACK_GB_HOUR_RATE
-
-    def _score(self, e: StoredEntry, pricing_rate: float) -> float:
-        """Cost-aware eviction score (higher = keep): $ saved per hour by this
-        entry minus its $ storage rate; LRU mode uses recency only."""
-        if self.eviction == "lru":
-            return e.last_used_s
-        age_h = max((self.clock.now - e.created_s) / 3600.0, 1e-6)
-        save_rate = e.saved_per_use * e.uses / age_h
-        hold_rate = pricing_rate * e.nbytes / GB
-        return save_rate - hold_rate
-
-    def _evict_one(self, tier: str) -> bool:
-        cands = [e for e in self.entries.values() if e.tier == tier]
-        if not cands:
-            return False
-        rate = self._gb_hour_rate(tier)
-        victim = min(cands, key=lambda e: self._score(e, pricing_rate=rate))
-        self.trie.remove(victim.chain, victim.entry_id)
-        self.tiers[tier].used_bytes -= victim.nbytes
-        self.backends[tier].delete(victim.entry_id)
-        del self.entries[victim.entry_id]
-        self.evictions += 1
-        return True
-
-    # ------------------------------------------------------------------ #
-    def stats(self) -> Dict[str, Any]:
-        self._accrue()
-        return {
-            "entries": len(self.entries),
-            "evictions": self.evictions,
-            "rejected_puts": self.rejected_puts,
-            "tiers": {
-                n: {"used_gb": t.used_bytes / GB, "gb_hours": t.gb_hours}
-                for n, t in self.tiers.items()
-            },
-        }
+class ContextStore(TieredStore):
+    """Multi-tier, content-addressed store for per-context model state
+    (legacy name; see ``hierarchy.TieredStore``)."""

@@ -30,6 +30,9 @@ class TransferHandle:
     nbytes: float
     delay_s: float
     issued_at_s: float
+    # time spent waiting for a free slot on a concurrency-limited link
+    # (``hierarchy.ConcurrencyLimitedBackend``); included in ``delay_s``.
+    queue_s: float = 0.0
 
     @property
     def completes_at_s(self) -> float:

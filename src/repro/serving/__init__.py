@@ -1,4 +1,5 @@
 """Step-driven serving engine with stored-KV-cache reuse (plan/execute API)."""
+from repro.serving import audit  # noqa: F401
 from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
 from repro.serving.planner import (  # noqa: F401
     AlwaysReusePlanner,

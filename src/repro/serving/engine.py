@@ -34,8 +34,13 @@ from repro.core.cost_model import Workload, s_storage_bytes
 from repro.core.perf_model import PerfModel, tpu_v5e
 from repro.core.pricing import Pricing, tpu_v5e_pod
 from repro.kvcache import paged
-from repro.kvcache.backend import StorageBackend, default_backends
-from repro.kvcache.store import ContextStore
+from repro.kvcache.backend import StorageBackend
+from repro.kvcache.hierarchy import (
+    BreakEvenMigrator,
+    TieredStore,
+    TierSpec,
+    build_backends,
+)
 from repro.kvcache.transfer import SimClock, TransferModel
 from repro.models import registry
 from repro.serving import events as ev
@@ -59,6 +64,18 @@ class EngineConfig:
     tier_capacities_gb: Dict[str, float] = dataclasses.field(
         default_factory=lambda: {"host_dram": 64.0, "io2": 1024.0}
     )
+    # Full hierarchy declaration (fastest first); overrides tier_capacities_gb
+    # and enables per-tier backend kinds + link concurrency limits.
+    tier_specs: Optional[List[TierSpec]] = None
+    # Tier write-backs land in (default: the last/cheapest tier).
+    store_tier: Optional[str] = None
+    # >0 enables the clock-driven break-even migration pass at this cadence;
+    # migrations surface as TierMigrated events.
+    migration_interval_s: float = 0.0
+    migration_policy: Optional[BreakEvenMigrator] = None
+    # Under capacity pressure, demote the least valuable entry one tier down
+    # instead of deleting it outright.
+    spill_on_pressure: bool = False
     compress_tier: Optional[str] = None  # e.g. "io2" for the int8 tier
     overlap_load: bool = False  # beyond-paper prefetch overlap
     hedge: Optional[HedgePolicy] = None
@@ -104,12 +121,19 @@ class ServingEngine:
 
         self.clock = SimClock()
         self.transfer = TransferModel(self.perf, self.pricing)
-        self.backends = backends or default_backends(
-            self.ec.tier_capacities_gb,
-            transfer=self.transfer, clock=self.clock, hedge=self.ec.hedge,
+        self._c_gpu_s = self.pricing.compute.cost_per_hour / 3600.0
+        if self.ec.tier_specs is not None:
+            specs = list(self.ec.tier_specs)
+        else:
+            specs = [TierSpec(n, gb) for n, gb in self.ec.tier_capacities_gb.items()]
+        self.backends = backends or build_backends(
+            specs, transfer=self.transfer, clock=self.clock, hedge=self.ec.hedge,
         )
-        self.store = ContextStore(
-            tier_capacities_gb=self.ec.tier_capacities_gb,
+        migration = self.ec.migration_policy
+        if migration is None and self.ec.migration_interval_s > 0:
+            migration = BreakEvenMigrator(compute_cost_per_s=self._c_gpu_s)
+        self.store = TieredStore(
+            tiers=specs,
             transfer=self.transfer,
             clock=self.clock,
             chunk_tokens=self.ec.chunk_tokens,
@@ -117,6 +141,8 @@ class ServingEngine:
             eviction=self.ec.eviction,
             backends=self.backends,
             pricing=self.pricing,
+            migration=migration,
+            spill_on_pressure=self.ec.spill_on_pressure,
         )
         self.planner: ReusePlanner = planner or CostAwarePlanner()
         self.planner.configure(
@@ -129,9 +155,11 @@ class ServingEngine:
         self.queue = AdmissionQueue()
         self.slots = [Slot(i) for i in range(self.ec.max_slots)]
         self.records: List[RequestRecord] = []
-        self._c_gpu_s = self.pricing.compute.cost_per_hour / 3600.0
         # req_id -> clock time its context prefetch completes
         self._prefetch_ready: Dict[int, float] = {}
+        # req_id -> entry pinned on its behalf (prefetch/eviction race guard)
+        self._prefetch_pins: Dict[int, str] = {}
+        self._next_migration_s = self.ec.migration_interval_s
 
         self._state = self.api.init_state(cfg, self.ec.max_slots, self.ec.max_len)
         self._jit_prefill = jax.jit(self._prefill_impl)
@@ -165,8 +193,11 @@ class ServingEngine:
     def step(self) -> List[ev.Event]:
         """Advance the engine by one scheduling step and return its events:
         admit one request if a slot and an arrived request exist, else run one
-        batched decode step, else jump the clock to the next arrival."""
+        batched decode step, else jump the clock to the next arrival.  A due
+        migration pass (EngineConfig.migration_interval_s) piggybacks on the
+        step and surfaces as TierMigrated events."""
         events: List[ev.Event] = []
+        self._run_migrations(events)
         if self._admit_one(events):
             return events
         if any(s.active for s in self.slots):
@@ -196,6 +227,32 @@ class ServingEngine:
             storage_cost=self.store.storage_cost(self.pricing),
             transfer_cost=self.transfer.transfer_fees(),
         )
+
+    # ------------------------------------------------------------------ #
+    # Tier migration (clock-driven economics pass)
+    # ------------------------------------------------------------------ #
+    def _run_migrations(self, events: List[ev.Event]) -> None:
+        if (
+            self.ec.migration_interval_s <= 0
+            or self.store.migration is None
+            or self.clock.now < self._next_migration_s
+        ):
+            return
+        self.store.run_migrations()
+        self._next_migration_s = self.clock.now + self.ec.migration_interval_s
+        self._emit_migrations(events)
+
+    def _emit_migrations(self, events: List[ev.Event]) -> None:
+        """Surface store migrations (policy passes AND pressure spills) as
+        typed events, stamped with the move's own SimClock time."""
+        for m in self.store.drain_migrations():
+            events.append(
+                ev.TierMigrated(
+                    t_s=m.t_s, req_id=-1, entry_id=m.entry_id,
+                    from_tier=m.from_tier, to_tier=m.to_tier,
+                    nbytes=m.nbytes, reason=m.reason,
+                )
+            )
 
     # ------------------------------------------------------------------ #
     # Admission: pop -> plan -> execute plan
@@ -249,6 +306,7 @@ class ServingEngine:
         else:
             load_s, matched = 0.0, 0
             prefill_s, logits, temp = self._execute_recompute(req, plan, events)
+        self._release_prefetch(req.req_id)
 
         # ---- install into the batch slot ------------------------------- #
         self._state = paged.insert_slot(self.cfg, self._state, slot.index, temp)
@@ -289,7 +347,28 @@ class ServingEngine:
                 frac = 1.0
             elif partial_ok:
                 frac = match.matched_tokens / n_ctx
-        return StoreLookup(match=match, entry=entry, fraction=frac, partial_ok=partial_ok)
+        queue_wait: Dict[str, float] = {}
+        if entry is not None and frac > 0:
+            # contended-link visibility for the planner: predicted queueing
+            # delay on the entry's tier (0 on uncontended links)
+            wait = self.store.estimated_queue_wait(
+                entry.tier, self._entry_fetch_bytes(entry, match.matched_tokens)
+            )
+            if wait > 0:
+                queue_wait[entry.tier] = wait
+        return StoreLookup(
+            match=match, entry=entry, fraction=frac, partial_ok=partial_ok,
+            queue_wait_s=queue_wait,
+        )
+
+    def _entry_fetch_bytes(self, e, matched_tokens: int) -> float:
+        """Bytes a fetch of ``matched_tokens`` moves, at economics scale."""
+        if self.cost_cfg is not self.cfg:
+            return s_storage_bytes(
+                self.cost_cfg, matched_tokens,
+                compression=0.5 if self.ec.compress_tier == e.tier else 1.0,
+            )
+        return e.nbytes * matched_tokens / max(e.n_tokens, 1)
 
     # ------------------------------------------------------------------ #
     # Execute: the two plan interpretations
@@ -303,17 +382,17 @@ class ServingEngine:
         entry = lookup.entry
         matched = plan.matched_tokens
         temp = self.api.init_state(self.cfg, 1, self.ec.max_len)
-        artifact, delay = self.store.fetch(
-            entry.entry_id, fraction=matched / entry.n_tokens
-        )
         nbytes = plan.fetch_bytes
+        override = None
         if self.cost_cfg is not self.cfg:
-            # economics-at-scale: charge the FULL arch's KV bytes
-            nbytes = s_storage_bytes(
-                self.cost_cfg, matched,
-                compression=0.5 if self.ec.compress_tier == entry.tier else 1.0,
-            )
-            delay = self.store.estimate_load_delay(entry.tier, nbytes)
+            # economics-at-scale: charge the FULL arch's KV bytes, and occupy
+            # the tier's link for them — queueing under burst (concurrency-
+            # limited backends) is modeled at the same scale as the delay.
+            nbytes = self._entry_fetch_bytes(entry, matched)
+            override = nbytes
+        artifact, delay = self.store.fetch(
+            entry.entry_id, fraction=matched / entry.n_tokens, nbytes=override
+        )
         ready = self._prefetch_ready.pop(req.req_id, None)
         if ready is not None:
             # fetch was issued while earlier requests were being served:
@@ -357,6 +436,9 @@ class ServingEngine:
             entry_id, _ = self.store.put(
                 ctx, artifact, tier=self._store_tier(), saved_per_use=saved
             )
+            # capacity-pressure spills triggered by this put surface now, at
+            # their own timestamp, not at the next step's drain
+            self._emit_migrations(events)
             if entry_id is not None:
                 e = self.store.entries[entry_id]
                 events.append(
@@ -407,17 +489,26 @@ class ServingEngine:
             m, e = self.store.lookup(list(nxt.context_tokens))
             if e is None or m.matched_tokens == 0:
                 continue
-            if self.cost_cfg is not self.cfg:
-                nbytes = s_storage_bytes(
-                    self.cost_cfg, m.matched_tokens,
-                    compression=0.5 if self.ec.compress_tier == e.tier else 1.0,
-                )
-            else:
-                nbytes = e.nbytes * m.matched_tokens / max(e.n_tokens, 1)
+            nbytes = self._entry_fetch_bytes(e, m.matched_tokens)
             delay = self.store.estimate_load_delay(e.tier, nbytes)
             self._prefetch_ready[nxt.req_id] = self.clock.now + delay
+            # pin until admission consumes or abandons the prefetch: eviction
+            # pressure (another request's write-back) and demotion must not
+            # invalidate an in-flight fetch (ROADMAP prefetch/eviction race)
+            self.store.pin(e.entry_id)
+            self._prefetch_pins[nxt.req_id] = e.entry_id
+
+    def _release_prefetch(self, req_id: int) -> None:
+        """Admission consumed (or abandoned) this request's prefetch: drop the
+        ready-time record and release the eviction pin."""
+        self._prefetch_ready.pop(req_id, None)
+        entry_id = self._prefetch_pins.pop(req_id, None)
+        if entry_id is not None:
+            self.store.unpin(entry_id)
 
     def _store_tier(self) -> str:
+        if self.ec.store_tier is not None:
+            return self.ec.store_tier
         return self.store.tier_order[-1]  # cloud tier (paper's EBS)
 
     # ------------------------------------------------------------------ #

@@ -81,9 +81,21 @@ class ClockAdvanced(Event):
     to_s: float
 
 
+@dataclasses.dataclass(frozen=True)
+class TierMigrated(Event):
+    """An entry moved between storage tiers (req_id is -1: the clock-driven
+    economics pass or a capacity-pressure spill, not a request)."""
+
+    entry_id: str
+    from_tier: str
+    to_tier: str
+    nbytes: float
+    reason: str  # "promote" | "demote" | "spill"
+
+
 AnyEvent = Union[
     RequestAdmitted, PlanChosen, KVLoaded, PrefillDone, StoreWriteBack,
-    TokenEmitted, RequestFinished, ClockAdvanced,
+    TokenEmitted, RequestFinished, ClockAdvanced, TierMigrated,
 ]
 
 

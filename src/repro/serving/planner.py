@@ -44,6 +44,10 @@ class StoreLookup:
     # architecture cannot consume it — SSM state is all-or-nothing).
     fraction: float
     partial_ok: bool
+    # tier -> predicted queueing delay on that tier's (concurrency-limited)
+    # link right now; empty for uncontended links.  Tier-aware planners fold
+    # this into per-tier TTFT estimates.
+    queue_wait_s: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def hit(self) -> bool:
@@ -165,12 +169,15 @@ class _PlannerBase:
 
 class CostAwarePlanner(_PlannerBase):
     """The paper's policy: cheapest SLO-satisfying option, break-even-gated
-    write-back."""
+    write-back.  Tier-aware: each candidate tier's TTFT estimate includes the
+    predicted queueing delay on that tier's contended link, so a burst on a
+    limit-k backend can tip the decision back to recompute under a TTFT SLO."""
 
     def plan(self, request: Request, lookup: StoreLookup, workload: Workload) -> ReusePlan:
         decision = policy_mod.decide(
             self.cost_cfg, workload, self.pricing, self.perf,
             available=lookup.available(),
+            queue_wait_s=lookup.queue_wait_s,
         )
         store_after = self._storable(request, lookup) and policy_mod.should_store(
             self.cost_cfg, workload, self.pricing, self.perf,

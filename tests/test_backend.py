@@ -11,6 +11,7 @@ from repro.kvcache.backend import (
     StorageBackend,
     default_backends,
 )
+from repro.kvcache.hierarchy import DiskSpillBackend, RpcBackend
 from repro.kvcache.store import ContextStore
 from repro.kvcache.transfer import SimClock, TransferModel
 from repro.serving.scheduler import HedgePolicy
@@ -23,6 +24,8 @@ def _transfer():
 BACKENDS = {
     "host_dram": HostMemoryBackend,
     "io2": ObjectStoreBackend,
+    "local_nvme": DiskSpillBackend,
+    "peer_dram": RpcBackend,
 }
 
 
@@ -45,7 +48,7 @@ class TestConformance:
         assert h.completes_at_s == pytest.approx(5.0 + h.delay_s)
         assert backend.contains("a") and not backend.contains("b")
         got, h2 = backend.get("a")
-        assert got is payload
+        np.testing.assert_array_equal(got["k"], payload["k"])  # disk: a copy
         assert h2.kind == "load" and h2.nbytes == 96.0 and h2.delay_s > 0
 
     def test_partial_read_bills_fraction(self, backend):
@@ -59,10 +62,21 @@ class TestConformance:
         payload = [1, 2, 3]
         backend.put("a", payload, nbytes=24.0)
         loaded0 = backend.transfer.stats[backend.name].load_events
-        assert backend.peek("a") is payload
+        assert backend.peek("a") == payload
         assert backend.transfer.stats[backend.name].load_events == loaded0  # free
         assert backend.delete("a") and not backend.contains("a")
         assert not backend.delete("a")
+
+    def test_missing_key_error_names_tier_and_key(self, backend):
+        with pytest.raises(KeyError, match=f"{backend.name}.*'ghost'"):
+            backend.get("ghost")
+        with pytest.raises(KeyError, match=f"{backend.name}.*'ghost'"):
+            backend.peek("ghost")
+
+    def test_negative_nbytes_rejected(self, backend):
+        with pytest.raises(ValueError, match=f"nbytes.*{backend.name}"):
+            backend.put("a", object(), nbytes=-1.0)
+        assert not backend.contains("a")
 
     def test_transfer_accounting(self, backend):
         backend.put("a", object(), nbytes=100.0)
