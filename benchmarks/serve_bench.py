@@ -1,0 +1,219 @@
+"""Serving throughput benchmark: burst + steady-state workloads through the
+packed batch-admission engine, vs single-request admission.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--requests N]
+        [--steady-requests N] [--slots K] [--out BENCH_serving.json]
+
+Numerics run the reduced config on CPU; times/costs are modeled at
+``--cost-arch`` scale (paper-style V100x4 + AWS pricing), so requests/s and
+TTFT are economics-model numbers, not CPU wall clock.  Emits
+``BENCH_serving.json``:
+
+  * per-workload, per-mode (packed vs single): requests/s over the modeled
+    horizon, admission throughput (requests / modeled load+prefill busy
+    time), mean/p95 TTFT, packed-prefill occupancy, jit bucket hit rate,
+    trie-walk savings;
+  * ``speedup``: packed-over-single admission-throughput ratio per workload
+    (the PR's headline number; CI smoke asserts >= 2x on the burst).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+import numpy as np
+
+
+def _requests(cfg, *, n, n_ctx, ctx_len, prompt_len, new, arrivals, seed=0,
+              ctx_seed=None):
+    """``ctx_seed`` pins the context pool independently of the prompt stream
+    (a warmup wave and its measured wave must share contexts)."""
+    rng = np.random.default_rng(seed)
+    ctx_rng = np.random.default_rng(seed if ctx_seed is None else ctx_seed)
+    ctxs = [
+        list(map(int, ctx_rng.integers(0, cfg.vocab, ctx_len))) for _ in range(n_ctx)
+    ]
+    return [
+        dict(
+            req_id=i,
+            context_tokens=ctxs[i % n_ctx],
+            prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, prompt_len))),
+            max_new_tokens=new,
+            arrival_s=float(arrivals[i]),
+            expected_reuses=max(n // n_ctx, 1),
+        )
+        for i in range(n)
+    ]
+
+
+def _serve(cfg, params, reqs, *, slots, cost_arch, admit_batch, warmup=None):
+    """Serve ``reqs`` (after an optional ``warmup`` wave on the same engine —
+    the steady-state measurement: compiles during warmup are free, compiles
+    during the measured wave are steady-state recompiles)."""
+    import jax  # noqa: F401  (engine imports need an initialized backend)
+
+    from repro.core.perf_model import PerfModel, V100_X4_HF
+    from repro.core.pricing import AWS_PAPER
+    from repro.serving import AlwaysReusePlanner, EngineConfig, Request, ServingEngine
+
+    ec = EngineConfig(
+        max_slots=slots, max_len=256, chunk_tokens=16,
+        cost_arch=cost_arch, admit_batch=admit_batch,
+    )
+    eng = ServingEngine(
+        cfg, params, engine_cfg=ec, planner=AlwaysReusePlanner(),
+        pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF),
+    )
+    if warmup is not None:
+        for r in warmup:
+            eng.submit(Request(**r))
+        eng.run()
+    warm = eng.packed_stats()  # snapshot: every metric below is wave-scoped
+    t0 = eng.clock.now
+    n_warm = len(eng.records)
+    for r in reqs:
+        eng.submit(Request(**{**r, "arrival_s": r["arrival_s"] + t0}))
+    summary = eng.run()
+    records = eng.records[n_warm:]  # measured wave only
+    ttft = np.array([r.ttft_s for r in records])
+    stats = eng.packed_stats()
+    horizon = max(summary.horizon_s - t0, 1e-12)
+    busy = stats["admission_busy_s"] - warm["admission_busy_s"]
+    q_tokens = stats["packed_q_tokens"] - warm["packed_q_tokens"]
+    q_len = stats["packed_q_len"] - warm["packed_q_len"]
+    jit_calls = lambda s: s["jit"]["hits"] + s["jit"]["misses"]  # noqa: E731
+    hits = stats["jit"]["hits"] - warm["jit"]["hits"]
+    return {
+        "n_requests": len(records),
+        "requests_per_s": len(records) / horizon,
+        "admission_throughput_rps": len(records) / max(busy, 1e-12),
+        "admission_busy_s": busy,
+        "mean_ttft_s": float(ttft.mean()),
+        "p95_ttft_s": float(np.percentile(ttft, 95)),
+        "reuse_hits": sum(1 for r in records if r.action in ("load", "partial")),
+        "packed_occupancy": q_tokens / max(q_len, 1),
+        "jit_hit_rate": hits / max(jit_calls(stats) - jit_calls(warm), 1),
+        "jit_misses": stats["jit"]["misses"] - warm["jit"]["misses"],
+        "batches": stats["batches"] - warm["batches"],
+        "lookup_walks": stats["lookup_walks"] - warm["lookup_walks"],
+        "lookup_reuses": stats["lookup_reuses"] - warm["lookup_reuses"],
+        "total_cost": summary.total_cost,
+    }
+
+
+def run(
+    n_burst: int = 24,
+    n_steady: int = 24,
+    slots: int = 8,
+    arch: str = "llama-7b",
+    cost_arch: str = "llama-7b",
+    seed: int = 0,
+) -> Dict:
+    import jax
+
+    from repro.configs import get_config, reduced_config
+    from repro.models import registry
+
+    cfg = reduced_config(get_config(arch))
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+
+    workloads = {
+        # burst: a query burst against a WARM context store (the paper's
+        # reuse regime — contexts were ingested by earlier traffic, here the
+        # n_ctx seed requests at t=0).  Suffix prefills are short, so
+        # admission is parameter-read/storage-load bound and the packed
+        # kernel amortizes one parameter read (and overlaps the loads) over
+        # the whole batch.
+        "burst": _requests(
+            cfg, n=n_burst, n_ctx=2, ctx_len=96, prompt_len=16, new=4,
+            arrivals=[0.0] * 2 + [1.0] * (n_burst - 2), seed=seed,
+        ),
+        # steady: Poisson-ish arrivals over a few shapes — exercises the jit
+        # bucket cache (zero recompiles after warmup is asserted below)
+        "steady": _requests(
+            cfg, n=n_steady, n_ctx=3, ctx_len=96, prompt_len=16, new=4,
+            arrivals=np.cumsum(rng.exponential(0.05, n_steady)), seed=seed + 1,
+            ctx_seed=seed + 100,
+        ),
+    }
+
+    # steady-state is measured AFTER a same-shape warmup wave on the same
+    # engine: every jit bucket compiles during warmup, so any compile in the
+    # measured wave is a steady-state recompile (must be zero).
+    warmups = {
+        "burst": None,
+        "steady": _requests(
+            cfg, n=max(n_steady, 2 * slots), n_ctx=3, ctx_len=96,
+            prompt_len=16, new=4,
+            arrivals=np.cumsum(rng.exponential(0.05, max(n_steady, 2 * slots))),
+            seed=seed + 2, ctx_seed=seed + 100,
+        ),
+    }
+
+    results: Dict = {"workloads": {}, "speedup": {}}
+    for name, reqs in workloads.items():
+        packed = _serve(cfg, params, reqs, slots=slots, cost_arch=cost_arch,
+                        admit_batch=None, warmup=warmups[name])
+        single = _serve(cfg, params, reqs, slots=slots, cost_arch=cost_arch,
+                        admit_batch=1, warmup=warmups[name])
+        results["workloads"][name] = {"packed": packed, "single": single}
+        results["speedup"][name] = (
+            packed["admission_throughput_rps"]
+            / max(single["admission_throughput_rps"], 1e-12)
+        )
+    results["config"] = {
+        "arch": arch, "cost_arch": cost_arch, "slots": slots,
+        "n_burst": n_burst, "n_steady": n_steady,
+    }
+    return results
+
+
+def main() -> List[str]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=24, help="burst workload size")
+    ap.add_argument("--steady-requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--arch", default="llama-7b")
+    ap.add_argument("--cost-arch", default="llama-7b")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+
+    res = run(
+        n_burst=args.requests, n_steady=args.steady_requests,
+        slots=args.slots, arch=args.arch, cost_arch=args.cost_arch,
+    )
+    pathlib.Path(args.out).write_text(json.dumps(res, indent=2))
+
+    lines = []
+    for name, modes in res["workloads"].items():
+        p, s = modes["packed"], modes["single"]
+        lines.append(
+            f"{name}: packed {p['admission_throughput_rps']:.1f} req/s admission "
+            f"(occupancy {p['packed_occupancy']:.2f}, jit hit {p['jit_hit_rate']:.2f}) "
+            f"vs single {s['admission_throughput_rps']:.1f} req/s "
+            f"-> {res['speedup'][name]:.1f}x; "
+            f"mean TTFT {p['mean_ttft_s']*1e3:.1f} ms vs {s['mean_ttft_s']*1e3:.1f} ms"
+        )
+    for ln in lines:
+        print(ln)
+
+    # CI smoke guardrails: the PR's acceptance criteria, asserted on the
+    # emitted numbers so the perf claim cannot silently rot.
+    burst = res["speedup"]["burst"]
+    assert burst >= 2.0, f"burst admission speedup {burst:.2f}x < 2x"
+    steady = res["workloads"]["steady"]["packed"]
+    # zero steady-state recompiles: every jit bucket compiled in the warmup
+    # wave; the measured wave ran entirely on cached kernels (jit_misses is
+    # wave-scoped, like every other metric in the per-mode dict)
+    assert steady["jit_misses"] == 0, (
+        "steady-state serving kept recompiling:", steady)
+    print(f"wrote {args.out}")
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -144,17 +144,49 @@ class PerfModel:
     # ----------------------------------------------------------------- #
     # Times (seconds) — the paper's T_prefill / T_decode
     # ----------------------------------------------------------------- #
-    def t_prefill(self, cfg: ArchConfig, L: int, batch: int = 1) -> float:
-        if L <= 0:
-            return 0.0
+    def _prefill_roofline(
+        self, cfg: ArchConfig, flops: float, total_tokens: int
+    ) -> float:
+        """max(comp, mem) for one prefill launch: parameters stream from HBM
+        once per launch regardless of how many requests' tokens it carries."""
         hw = self.hw
-        flops = self.prefill_flops(cfg, L) * batch
         comp = flops / (hw.devices * hw.peak_flops * hw.mfu)
         from repro.models.registry import count_active_params
 
-        bytes_ = count_active_params(cfg) * 2 + cfg.kv_bytes_per_token(2) * L * batch
+        bytes_ = (
+            count_active_params(cfg) * 2 + cfg.kv_bytes_per_token(2) * total_tokens
+        )
         mem = bytes_ / (hw.devices * hw.hbm_bw * hw.membw_eff)
         return max(comp, mem)
+
+    def t_prefill(self, cfg: ArchConfig, L: int, batch: int = 1) -> float:
+        if L <= 0:
+            return 0.0
+        return self._prefill_roofline(
+            cfg, self.prefill_flops(cfg, L) * batch, L * batch
+        )
+
+    def t_prefill_packed(self, cfg: ArchConfig, lens) -> float:
+        """One packed ragged prefill over several requests' token runs.
+
+        vs ``sum(t_prefill(L) for L in lens)``: FLOPs are additive (each
+        segment still pays its own attention quadratic), but the roofline
+        applies ONCE — parameters stream from HBM once for the whole packed
+        sequence instead of once per request, and the launch takes
+        max(comp, mem) of the totals rather than a sum of per-request maxes.
+        Small-segment admission bursts are parameter-read-bound, so this is
+        where batched admission's measured throughput win comes from.
+        A single segment delegates to ``t_prefill(L)`` — exact equality is a
+        contract (admit_batch=1 golden parity), not a numeric coincidence.
+        """
+        lens = [int(L) for L in lens if L > 0]
+        if not lens:
+            return 0.0
+        if len(lens) == 1:
+            return self.t_prefill(cfg, lens[0])
+        return self._prefill_roofline(
+            cfg, sum(self.prefill_flops(cfg, L) for L in lens), sum(lens)
+        )
 
     def t_decode(
         self, cfg: ArchConfig, L_out: int, context_len: int, batch: int = 1

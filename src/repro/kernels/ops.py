@@ -93,6 +93,36 @@ def flash_attention(
     )
 
 
+def packed_attention(
+    q: jax.Array,  # [B, Sq, H, hd] — packed token runs from several requests
+    k: jax.Array,  # [B, Skv, KV, hd]
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,  # [B, Sq] segment-local positions
+    kv_pos: jax.Array,  # [B, Skv]
+    q_seg: jax.Array,  # [B, Sq] segment (request) id per query token
+    kv_seg: jax.Array,  # [B, Skv] segment id per kv row
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Segment-masked attention over a packed ragged batch — the shared
+    suffix-prefill kernel of batched admission.  See
+    ``ref.packed_attention_ref`` for semantics."""
+    use_pallas, interpret = _use_pallas()
+    if use_pallas and q.shape[1] >= 128:
+        from repro.kernels import packed_prefill
+
+        if packed_prefill.supported(q, k, v, window=window):
+            return packed_prefill.packed_flash_attention(
+                q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+                causal=causal, window=window, interpret=interpret,
+            )
+    return ref.packed_attention_ref(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg, kv_seg=kv_seg,
+        causal=causal, window=window,
+    )
+
+
 def decode_attention(
     q: jax.Array,  # [B, 1, H, hd]
     k: jax.Array,  # [B, L, KV, hd]

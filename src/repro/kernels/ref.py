@@ -103,6 +103,53 @@ def attention_ref_chunked(
     return out[:, :Sq]
 
 
+def packed_attention_ref(
+    q: jax.Array,  # [B, Sq, H, hd] — token runs from several requests, packed
+    k: jax.Array,  # [B, Skv, KV, hd]
+    v: jax.Array,  # [B, Skv, KV, hd]
+    *,
+    q_pos: jax.Array,  # [B, Sq] segment-local positions of the query tokens
+    kv_pos: jax.Array,  # [B, Skv] segment-local positions (-1 = invalid slot)
+    q_seg: jax.Array,  # [B, Sq] segment (request) id per query token
+    kv_seg: jax.Array,  # [B, Skv] segment id per kv row
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """``attention_ref`` over a *packed ragged* batch: several requests'
+    suffix-prefills concatenated into one sequence.  Identical arithmetic to
+    ``attention_ref`` plus one extra mask term — a query may only attend kv
+    rows of its own segment (``q_seg == kv_seg``), so cross-request attention
+    is structurally impossible.  Positions are segment-local, which keeps
+    RoPE and causal/window masking exactly what each request would see alone.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+
+    qp = q_pos[:, None, None, :, None].astype(jnp.int32)  # [B,1,1,Sq,1]
+    sp = kv_pos[:, None, None, None, :].astype(jnp.int32)  # [B,1,1,1,Skv]
+    qs = q_seg[:, None, None, :, None].astype(jnp.int32)
+    ss = kv_seg[:, None, None, None, :].astype(jnp.int32)
+    mask = sp >= 0
+    mask &= qs == ss
+    if causal:
+        mask &= sp <= qp
+    if window is not None:
+        mask &= sp > qp - window
+
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = jnp.where(mask, w, 0.0)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    w = w / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
 def causal_positions(batch: int, seq: int, offset=0) -> jax.Array:
     """[B, S] positions ``offset + arange(S)``; offset scalar or [B]."""
     pos = jnp.arange(seq, dtype=jnp.int32)[None, :]

@@ -40,6 +40,7 @@ import dataclasses
 import hashlib
 import heapq
 import itertools
+import math
 import pathlib
 import pickle
 import shutil
@@ -178,13 +179,17 @@ class ConcurrencyLimitedBackend:
         while self._busy_until and self._busy_until[0] <= now:
             heapq.heappop(self._busy_until)
 
-    def _wait(self, now: float) -> float:
-        """Wait until a server frees (0 if one is free now)."""
-        self._prune(now)
-        if len(self._busy_until) < self.limit:
+    def _wait(self, now: float, heap: Optional[List[float]] = None) -> float:
+        """Wait until a server frees (0 if one is free now).  ``heap`` — an
+        alternative busy-until heap to evaluate against (a simulated copy for
+        planning); defaults to, and prunes, the live link state."""
+        if heap is None:
+            self._prune(now)
+            heap = self._busy_until
+        if len(heap) < self.limit:
             return 0.0
-        k = len(self._busy_until) - self.limit + 1
-        return max(0.0, heapq.nsmallest(k, self._busy_until)[-1] - now)
+        k = len(heap) - self.limit + 1
+        return max(0.0, heapq.nsmallest(k, heap)[-1] - now)
 
     def _reserve(self, service_s: float) -> float:
         now = self.clock.now
@@ -192,10 +197,22 @@ class ConcurrencyLimitedBackend:
         heapq.heappush(self._busy_until, now + wait + service_s)
         return wait
 
-    def estimated_wait(self, nbytes: float) -> float:
+    def estimated_wait(self, nbytes: float, pending: Sequence[float] = ()) -> float:
         """Predicted queueing delay for a fetch issued now (no reservation) —
-        the planning/economics surface."""
-        return self._wait(self.clock.now)
+        the planning/economics surface.  ``pending`` lists byte sizes of
+        fetches that will hit this link at the same instant AHEAD of this one
+        (earlier members of an admission batch): their reservations are
+        simulated on a copy of the link state so batch-mates see each other's
+        queueing at plan time, not just transfers already in flight."""
+        now = self.clock.now
+        if not pending:
+            return self._wait(now)
+        self._prune(now)
+        heap = list(self._busy_until)  # already heap-ordered; real state untouched
+        for nb in pending:
+            w = self._wait(now, heap)
+            heapq.heappush(heap, now + w + self.inner.estimate_load_delay(nb))
+        return self._wait(now, heap)
 
     def in_flight(self) -> int:
         self._prune(self.clock.now)
@@ -433,6 +450,18 @@ class TieredStore:
         self._ids = itertools.count()
         self.evictions = 0
         self.rejected_puts = 0
+        # bumped on every trie mutation (put/evict): consumers holding a
+        # lookup result (e.g. the engine's prefetch pass) revalidate with it
+        # instead of re-walking the trie at admission.
+        self.trie_version = 0
+        # banded-migration memo: entry_id -> (band key, last target).  An
+        # entry whose reuse-frequency band, tier, size, and pricing env are
+        # all unchanged since it last evaluated to "stay put" is skipped by
+        # run_migrations — the ROADMAP O(entries x tiers) fix.
+        self._mig_cache: Dict[str, Tuple[tuple, Optional[str]]] = {}
+        self._mig_env: Optional[tuple] = None
+        self.migration_evals = 0
+        self.migration_skips = 0
 
     # ------------------------------------------------------------------ #
     # Accounting
@@ -527,6 +556,7 @@ class TieredStore:
         )
         self.entries[entry_id] = e
         ts.used_bytes += nbytes
+        self.trie_version += 1
         handle = self.backends[tier].put(entry_id, artifact, nbytes)
         return entry_id, (handle.delay_s if sync else 0.0)
 
@@ -560,11 +590,16 @@ class TieredStore:
         charging nothing — the prefetch/economics planning surface."""
         return self.backends[tier].estimate_load_delay(nbytes)
 
-    def estimated_queue_wait(self, tier: str, nbytes: float) -> float:
+    def estimated_queue_wait(
+        self, tier: str, nbytes: float, pending: Sequence[float] = ()
+    ) -> float:
         """Predicted queueing delay on ``tier``'s link right now (0 for
-        uncontended links)."""
+        uncontended links).  ``pending`` — byte sizes of same-instant fetches
+        ahead of this one (see ``ConcurrencyLimitedBackend.estimated_wait``)."""
         fn = getattr(self.backends[tier], "estimated_wait", None)
-        return fn(nbytes) if fn is not None else 0.0
+        if fn is None:
+            return 0.0
+        return fn(nbytes, pending) if pending else fn(nbytes)
 
     # ------------------------------------------------------------------ #
     # Tier movement / eviction / migration
@@ -607,6 +642,7 @@ class TieredStore:
         e.tier, e.nbytes, e.compressed = to_tier, new_nbytes, new_compressed
         dst.used_bytes += new_nbytes
         self.backends[to_tier].put(entry_id, new_payload, new_nbytes, charge=False)
+        self._mig_cache.pop(entry_id, None)  # tier changed: re-evaluate fresh
         mig = TierMigration(
             t_s=self.clock.now, entry_id=entry_id, from_tier=from_tier,
             to_tier=to_tier, nbytes=new_nbytes, reason=reason,
@@ -620,18 +656,58 @@ class TieredStore:
     def promote(self, entry_id: str, to_tier: str) -> bool:
         return self._move(entry_id, to_tier, reason="promote") is not None
 
-    def run_migrations(self) -> List[TierMigration]:
+    def _migration_band_key(self, e: StoredEntry) -> tuple:
+        """Everything the break-even decision depends on, discretized: the
+        entry's reuse-frequency *band* (log2 bucket — the decision thresholds
+        are crossings of lines linear in freq, so a decision flip requires a
+        freq change that soon crosses a band edge), its residency gate, tier,
+        and size.  Within a band the decision is cached; drift inside one
+        band can defer a move by at most one band (< 2x freq change)."""
+        now = self.clock.now
+        age_h = max((now - e.created_s) / 3600.0, 1e-9)
+        freq = e.uses / age_h
+        band = None if freq <= 0 else int(math.floor(math.log2(freq)))
+        young = (
+            self.migration.min_residency_s > 0
+            and now - e.created_s < self.migration.min_residency_s
+        )
+        return (band, young, e.tier, e.nbytes, e.compressed)
+
+    def run_migrations(self, full_scan: bool = False) -> List[TierMigration]:
         """Clock-driven migration pass: apply the bound policy to every
-        unpinned entry.  Demotions run first (freeing hot-tier capacity for
-        the promotions), then promotions."""
+        unpinned entry whose situation may have changed.  Entries are indexed
+        by reuse-frequency band (``_migration_band_key``): one that last
+        evaluated to "stay put" under the same band/tier/size/pricing is
+        skipped, so a steady store costs O(entries) bookkeeping instead of
+        O(entries x tiers) rate evaluations per tick (``migration_evals`` /
+        ``migration_skips`` expose the split; ``full_scan=True`` forces the
+        old exhaustive behavior).  Demotions run first (freeing hot-tier
+        capacity for the promotions), then promotions."""
         if self.migration is None:
             return []
         self._accrue()
+        env = (
+            tuple(self.tier_order),
+            tuple(self._gb_hour_rate(t) for t in self.tier_order),
+        )
+        if env != self._mig_env:  # tier pricing/topology changed: all stale
+            self._mig_cache.clear()
+            self._mig_env = env
         moves: List[Tuple[StoredEntry, str]] = []
         for e in list(self.entries.values()):
             if e.pins > 0:
+                # pinned entries were not evaluated: force a fresh look when
+                # the pin drops instead of trusting a stale "stay put"
+                self._mig_cache.pop(e.entry_id, None)
+                continue
+            key = self._migration_band_key(e)
+            cached = self._mig_cache.get(e.entry_id)
+            if not full_scan and cached is not None and cached == (key, None):
+                self.migration_skips += 1
                 continue
             tgt = self.migration.target(self, e)
+            self.migration_evals += 1
+            self._mig_cache[e.entry_id] = (key, tgt)
             if tgt is not None:
                 moves.append((e, tgt))
         done: List[TierMigration] = []
@@ -714,6 +790,8 @@ class TieredStore:
         self.tiers[tier].used_bytes -= victim.nbytes
         self.backends[tier].delete(victim.entry_id)
         del self.entries[victim.entry_id]
+        self._mig_cache.pop(victim.entry_id, None)
+        self.trie_version += 1
         self.evictions += 1
         return True
 
@@ -725,6 +803,8 @@ class TieredStore:
             "evictions": self.evictions,
             "rejected_puts": self.rejected_puts,
             "migrations": len(self.migration_log),
+            "migration_evals": self.migration_evals,
+            "migration_skips": self.migration_skips,
             "tiers": {
                 n: {"used_gb": t.used_bytes / GB, "gb_hours": t.gb_hours}
                 for n, t in self.tiers.items()

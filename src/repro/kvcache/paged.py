@@ -14,7 +14,8 @@ Artifacts are host numpy pytrees (storage is host/remote by definition);
 """
 from __future__ import annotations
 
-from typing import Any
+import dataclasses
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -163,3 +164,185 @@ def partial_reuse_allowed(cfg: ArchConfig) -> bool:
     hybrid / enc-dec store O(1)-or-encoder state snapshots at full context
     length only => all-or-nothing (DESIGN.md §6)."""
     return cfg.family in ("dense", "moe", "vlm") and cfg.n_ssm_layers == 0
+
+
+# --------------------------------------------------------------------------- #
+# Packed ragged prefill: layout + multi-slot insertion
+# --------------------------------------------------------------------------- #
+def packable_arch(cfg: ArchConfig, max_len: int) -> bool:
+    """Whether batched admission may pack this arch's suffix-prefills into one
+    ragged sequence.  Requires per-position attention state (no SSM/enc-dec
+    sequence mixing) and a non-ring KV cache: when ``sliding_window <
+    max_len`` the slot cache is a ring buffer whose prefill path attends
+    [old ring ++ new KV] — a layout a packed buffer cannot reproduce
+    bit-exactly — so SWA archs ride the per-request path."""
+    return (
+        cfg.family in ("dense", "moe", "vlm")
+        and cfg.n_ssm_layers == 0
+        and not (cfg.sliding_window and cfg.sliding_window < max_len)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSegment:
+    """One request's span of the packed sequence (all indices host-static)."""
+
+    slot: int  # batch slot the outputs scatter back into
+    kv_start: int  # first packed kv row of this segment (align-multiple)
+    q_start: int  # first packed q index of this segment's new tokens
+    matched: int  # reused prefix rows preloaded at [kv_start, kv_start+matched)
+    n_new: int  # new (tail + prompt) tokens prefilled by the kernel
+    n_total: int  # matched + n_new == rows valid after prefill
+
+    @property
+    def q_last(self) -> int:
+        return self.q_start + self.n_new - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PackLayout:
+    """Packed-sequence geometry for one admission batch.
+
+    kv spans are aligned to ``align`` (the flash kernel's kv block): every
+    segment starts at an align-multiple, so cross-segment kv blocks are
+    fully masked exact no-ops and the packed attention is bit-identical to
+    per-request attention (tests/test_packed.py).  The q side is
+    padding-free: new-token runs concatenate densely and only the total pads
+    up to the jit bucket."""
+
+    segments: Tuple[PackSegment, ...]
+    q_len: int  # bucketed total q length
+    kv_len: int  # bucketed total kv length
+    q_tokens: int  # sum of n_new (un-padded)
+
+    @property
+    def occupancy(self) -> float:
+        """Useful fraction of the padded q sequence the kernel runs over."""
+        return self.q_tokens / max(self.q_len, 1)
+
+
+def pack_bucket(n: int, minimum: int = 16) -> int:
+    """Round up to a power-of-two jit bucket so steady-state serving reuses
+    compiled shapes instead of recompiling per ragged length."""
+    b = max(minimum, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def pack_layout(
+    slots: List[int],
+    matched: List[int],
+    n_new: List[int],
+    *,
+    align: int = 128,
+    bucket_min: int = 16,
+) -> PackLayout:
+    segs: List[PackSegment] = []
+    kv_off = 0
+    q_off = 0
+    for slot, m, n in zip(slots, matched, n_new):
+        total = m + n
+        segs.append(
+            PackSegment(
+                slot=slot, kv_start=kv_off, q_start=q_off,
+                matched=m, n_new=n, n_total=total,
+            )
+        )
+        kv_off += -(-total // align) * align
+        q_off += n
+    return PackLayout(
+        segments=tuple(segs),
+        q_len=pack_bucket(q_off, bucket_min),
+        kv_len=pack_bucket(kv_off, max(align, bucket_min)),
+        q_tokens=q_off,
+    )
+
+
+def _attn_kinds(cfg: ArchConfig):
+    from repro.models import blocks as blocks_mod
+
+    kinds = blocks_mod.block_kinds(cfg)
+    assert all(k.mixer == "a" for k in kinds), (cfg.name, kinds)
+    return kinds, cfg.n_layers // len(kinds)
+
+
+def build_packed_caches(
+    cfg: ArchConfig, layout: PackLayout, artifacts: List[Any], dtype=None
+) -> Any:
+    """Packed per-layer KV buffers with every segment's reused prefix rows
+    preloaded at its kv span — the multi-slot insertion of the load path.
+    ``artifacts[i]`` is segment i's stored LMState (or None for recompute);
+    assembly happens host-side in one numpy pass, then lands on device as a
+    single transfer."""
+    from repro.models import common as common_mod
+    from repro.models.blocks import BlockCache
+
+    kinds, n_periods = _attn_kinds(cfg)
+    dtype = dtype or common_mod.resolve_dtype(cfg.dtype)
+    np_dtype = np.dtype(jnp.zeros((), dtype).dtype.name)
+    shape = (n_periods, 1, layout.kv_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+
+    out = []
+    for ki in range(len(kinds)):
+        k_buf = np.zeros(shape, np_dtype)
+        v_buf = np.zeros(shape, np_dtype)
+        for seg, art in zip(layout.segments, artifacts):
+            if art is None or seg.matched <= 0:
+                continue
+            rows = slice(seg.kv_start, seg.kv_start + seg.matched)
+            k_buf[:, :, rows] = np.asarray(
+                art.caches[ki].attn.k[:, :, : seg.matched], np_dtype
+            )
+            v_buf[:, :, rows] = np.asarray(
+                art.caches[ki].attn.v[:, :, : seg.matched], np_dtype
+            )
+        out.append(
+            BlockCache(KVCache(jnp.asarray(k_buf), jnp.asarray(v_buf)), None)
+        )
+    return tuple(out)
+
+
+def pack_arrays(layout: PackLayout, new_tokens: List[List[int]]) -> dict:
+    """Host-side int32 index arrays driving the packed kernel: tokens,
+    segment-local q/kv positions, segment ids, kv landing rows, and each
+    segment's last-q index (padded with 0 — callers ignore extra rows)."""
+    Sq, Skv = layout.q_len, layout.kv_len
+    tokens = np.zeros((1, Sq), np.int32)
+    q_pos = np.full((1, Sq), -(2**30), np.int32)
+    q_seg = np.full((1, Sq), -1, np.int32)
+    q_rows = np.full((1, Sq), Skv, np.int32)  # padding lands on the scratch row
+    kv_pos = np.full((1, Skv), -1, np.int32)
+    kv_seg = np.full((1, Skv), -2, np.int32)
+    for i, (seg, toks) in enumerate(zip(layout.segments, new_tokens)):
+        assert len(toks) == seg.n_new, (len(toks), seg)
+        q = slice(seg.q_start, seg.q_start + seg.n_new)
+        tokens[0, q] = toks
+        q_pos[0, q] = np.arange(seg.matched, seg.n_total, dtype=np.int32)
+        q_seg[0, q] = i
+        q_rows[0, q] = np.arange(
+            seg.kv_start + seg.matched, seg.kv_start + seg.n_total, dtype=np.int32
+        )
+        rows = slice(seg.kv_start, seg.kv_start + seg.n_total)
+        kv_pos[0, rows] = np.arange(seg.n_total, dtype=np.int32)
+        kv_seg[0, rows] = i
+    return {
+        "tokens": tokens, "q_pos": q_pos, "q_seg": q_seg, "q_rows": q_rows,
+        "kv_pos": kv_pos, "kv_seg": kv_seg,
+    }
+
+
+def packed_to_artifact(cfg: ArchConfig, caches: Any, seg: PackSegment, n: int) -> Any:
+    """Slice one segment's first ``n`` rows out of the packed buffers as a
+    standard batch-1 LMState artifact — the bridge back to ``insert_slot``
+    (slot installation) and ``ContextStore.put`` (write-back)."""
+    from repro.models.blocks import BlockCache
+
+    rows = slice(seg.kv_start, seg.kv_start + n)
+    return LMState(
+        pos=jnp.full((1,), n, jnp.int32),
+        caches=tuple(
+            BlockCache(KVCache(c.attn.k[:, :, rows], c.attn.v[:, :, rows]), None)
+            for c in caches
+        ),
+    )

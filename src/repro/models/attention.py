@@ -158,6 +158,46 @@ def prefill(
 
 
 # --------------------------------------------------------------------------- #
+# Packed ragged (suffix-)prefill: many requests, one kernel launch
+# --------------------------------------------------------------------------- #
+def prefill_packed(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # [1, Sq, D] — new tokens of ALL segments, concatenated
+    cache: KVCache,  # [1, Skv, KV, hd] packed buffer, reused prefixes preloaded
+    *,
+    q_pos: jax.Array,  # [1, Sq] segment-local positions of the new tokens
+    q_seg: jax.Array,  # [1, Sq] segment id per query token (-1 = padding)
+    q_rows: jax.Array,  # [1, Sq] packed-buffer row each new token's KV lands in
+    kv_pos: jax.Array,  # [1, Skv] segment-local position per kv row (-1 invalid)
+    kv_seg: jax.Array,  # [1, Skv] segment id per kv row
+) -> Tuple[jax.Array, KVCache]:
+    """Suffix-prefill of several requests in one attention call.
+
+    ``cache`` is the *packed* KV buffer: each segment owns a contiguous row
+    span holding [its reused context KV ++ its new KV], laid out by the
+    caller (``kvcache.paged.PackLayout``).  New-token K/V are scattered to
+    ``q_rows`` (padding tokens carry an out-of-range row and land on a
+    dropped scratch row), then every query attends its own segment only
+    (``q_seg == kv_seg``), causally at segment-local positions — numerically
+    the same attention each request would run alone.
+    """
+    q, k_new, v_new = _qkv(p, cfg, x)
+    if cfg.rope_theta is not None:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, q_pos, cfg.rope_theta)
+    cache = KVCache(
+        _scatter_rows_padded(cache.k, q_rows, k_new),
+        _scatter_rows_padded(cache.v, q_rows, v_new),
+    )
+    o = ops.packed_attention(
+        q, cache.k, cache.v, q_pos=q_pos, kv_pos=kv_pos, q_seg=q_seg,
+        kv_seg=kv_seg, causal=True, window=cfg.sliding_window,
+    )
+    return _out(p, o), cache
+
+
+# --------------------------------------------------------------------------- #
 # Decode (one token)
 # --------------------------------------------------------------------------- #
 def decode(

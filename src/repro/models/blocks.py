@@ -126,6 +126,32 @@ def prefill(
     return x, cache, aux
 
 
+def prefill_packed(
+    p: Params,
+    cfg: ArchConfig,
+    kind: BlockKind,
+    x: jax.Array,  # [1, Sq, D]
+    cache: BlockCache,  # packed attention KV buffer (mixer must be "a")
+    *,
+    q_pos: jax.Array,
+    q_seg: jax.Array,
+    q_rows: jax.Array,
+    kv_pos: jax.Array,
+    kv_seg: jax.Array,
+) -> Tuple[jax.Array, BlockCache, jax.Array]:
+    """Packed ragged prefill of one block — attention mixers only (SSM state
+    mixes along the sequence, so SSM/hybrid archs cannot be packed)."""
+    assert kind.mixer == "a", "packed prefill requires an attention mixer"
+    h = layers.apply_norm(p["norm1"], cfg, x)
+    out, kv = attention.prefill_packed(
+        p["attn"], cfg, h, cache.attn,
+        q_pos=q_pos, q_seg=q_seg, q_rows=q_rows, kv_pos=kv_pos, kv_seg=kv_seg,
+    )
+    x = x + out
+    x, aux = _apply_ffn(p, cfg, kind, x)
+    return x, BlockCache(kv, None), aux
+
+
 def decode(
     p: Params,
     cfg: ArchConfig,

@@ -159,6 +159,58 @@ def prefill(
 
 
 # --------------------------------------------------------------------------- #
+# Packed ragged prefill (many requests, one launch) — attention archs only
+# --------------------------------------------------------------------------- #
+def prefill_packed(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,  # [1, Sq] new tokens of every segment, concatenated
+    caches: Tuple[blocks.BlockCache, ...],  # packed buffers (paged.init_packed_caches)
+    *,
+    q_pos: jax.Array,  # [1, Sq]
+    q_seg: jax.Array,  # [1, Sq]
+    q_rows: jax.Array,  # [1, Sq]
+    kv_pos: jax.Array,  # [1, Skv]
+    kv_seg: jax.Array,  # [1, Skv]
+    last_idx: jax.Array,  # [n] q index of each segment's last token
+) -> Tuple[jax.Array, Tuple[blocks.BlockCache, ...]]:
+    """Suffix-prefill of several requests as ONE packed sequence.
+
+    Everything outside attention is positionwise, so packing is transparent
+    to norms/MLP/MoE; attention isolates segments via ``q_seg``/``kv_seg``
+    (see ``attention.prefill_packed``).  Returns per-segment last-token
+    logits ``[n, V]`` (rows of ``last_idx``) and the updated packed caches,
+    from which the caller scatters each segment back into its batch slot
+    (``kvcache.paged.packed_to_artifact``).
+    """
+    kinds, _ = _layout(cfg)
+    assert all(k.mixer == "a" for k in kinds), (
+        "packed prefill requires attention-only stacks", cfg.name)
+    x = _embed_inputs(params, cfg, tokens, None)
+
+    def period_fn(x, per):
+        layer_params, caches_ = per
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            x, c, _ = blocks.prefill_packed(
+                layer_params[i], cfg, kind, x, caches_[i],
+                q_pos=q_pos, q_seg=q_seg, q_rows=q_rows,
+                kv_pos=kv_pos, kv_seg=kv_seg,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        _remat(cfg, period_fn), x, (tuple(params["layers"]), caches),
+        unroll=cfg.scan_unroll,
+    )
+    x = jnp.take_along_axis(x, last_idx.astype(jnp.int32)[None, :, None], axis=1)
+    x = layers.apply_norm(params["final_norm"], cfg, x)
+    logits = layers.lm_logits(params["embed"], cfg, x)[0]  # [n, V]
+    return logits, new_caches
+
+
+# --------------------------------------------------------------------------- #
 # Decode (one token per sequence)
 # --------------------------------------------------------------------------- #
 def decode(

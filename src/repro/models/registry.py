@@ -20,6 +20,9 @@ class ModelApi(NamedTuple):
     * init_state(cfg, batch, max_len) -> state pytree
     * prefill(params, cfg, tokens, state, embeds=None) -> (last_logits, state)
     * decode(params, cfg, tokens, state) -> (logits, state)
+    * prefill_packed(params, cfg, tokens, caches, **layout) -> (logits, caches)
+      — packed ragged prefill across requests; None for families that cannot
+      pack (enc-dec; SSM/hybrid stacks assert inside lm.prefill_packed).
     """
 
     init: Callable[..., Any]
@@ -27,6 +30,7 @@ class ModelApi(NamedTuple):
     init_state: Callable[..., Any]
     prefill: Callable[..., Any]
     decode: Callable[..., Any]
+    prefill_packed: Optional[Callable[..., Any]] = None
 
 
 def get_model(cfg: ArchConfig) -> ModelApi:
@@ -44,6 +48,7 @@ def get_model(cfg: ArchConfig) -> ModelApi:
         init_state=lm.init_state,
         prefill=lm.prefill,
         decode=lm.decode,
+        prefill_packed=lm.prefill_packed,
     )
 
 

@@ -9,11 +9,21 @@ up in the tiered ContextStore (chain-hash prefix match); a pluggable
 — and decode runs batched across slots.
 
 The engine is step-driven: ``submit()`` enqueues, ``step()`` performs one
-scheduling step (admit one request, or one batched decode step, or a clock
-jump to the next arrival) and returns the typed ``events`` it produced;
+scheduling step (admit a batch of requests, or one batched decode step, or a
+clock jump to the next arrival) and returns the typed ``events`` it produced;
 ``drain()`` iterates steps to completion; ``run()`` is the thin
 drain-then-summarize loop.  Traces, streaming callers, and the benchmarks
 all drive this one surface.
+
+Admission is *batched and packed*: every admissible request with a free slot
+is planned individually (lookup -> ReusePlan), then all unmatched context
+tails + prompts execute as ONE packed ragged suffix-prefill — token runs
+concatenated into a single sequence, segment ids keeping cross-request
+attention masked out (``kernels/packed_prefill.py``), outputs scattered back
+into per-slot paged state.  Packed lengths round up to power-of-two jit
+buckets so steady traffic reuses compiled kernels (``packed_stats()`` exposes
+the hit/miss counters); with ``admit_batch=1`` the packed path reproduces
+per-request admission numerics and timing exactly (golden-parity tested).
 
 Time/cost accounting: compute is real JAX execution with *modeled* durations
 (PerfModel — this container has no TPU), storage/network delays flow through
@@ -51,6 +61,7 @@ from repro.serving.planner import (
     ReusePlanner,
     StoreLookup,
 )
+from repro.serving.jit_cache import JitBucketStats
 from repro.serving.request import Request, RequestRecord, Slot
 from repro.serving.scheduler import AdmissionQueue, HedgePolicy
 
@@ -92,6 +103,35 @@ class EngineConfig:
     # at admission (TTFT pays the full fetch); with lookahead only the
     # not-yet-arrived remainder shows up in TTFT.
     prefetch_lookahead: int = 0
+    # Max requests admitted per step as one packed ragged prefill (None =
+    # every admissible request with a free slot).  1 reproduces per-request
+    # admission timing exactly (the serve_bench baseline).
+    admit_batch: Optional[int] = None
+    # Each segment's kv span starts at a multiple of this (the flash kernel's
+    # kv block): cross-segment kv blocks become fully-masked exact no-ops,
+    # which is what makes packed outputs bit-identical to per-request ones.
+    pack_align: int = 128
+    # Smallest jit bucket for the packed q length (lengths round up to the
+    # next power of two so steady-state serving stops recompiling).
+    pack_bucket_min: int = 16
+
+
+@dataclasses.dataclass
+class _Admission:
+    """One request's admission in flight: plan phase fills the first five
+    fields, packed execution the rest."""
+
+    req: Request
+    rec: RequestRecord
+    slot: Slot
+    plan: ReusePlan
+    lookup: StoreLookup
+    artifact: Any = None  # fetched stored state (None = recompute)
+    delay: float = 0.0  # raw storage fetch delay
+    load_s: float = 0.0  # delay actually charged (post-overlap)
+    nbytes: float = 0.0
+    matched: int = 0
+    new_tokens: List[int] = dataclasses.field(default_factory=list)
 
 
 class ServingEngine:
@@ -159,17 +199,47 @@ class ServingEngine:
         self._prefetch_ready: Dict[int, float] = {}
         # req_id -> entry pinned on its behalf (prefetch/eviction race guard)
         self._prefetch_pins: Dict[int, str] = {}
+        # req_id -> (PrefixMatch, entry_id, trie_version): the prefetch pass's
+        # trie walk, carried forward to admission so the same context is not
+        # walked twice; invalidated by any trie mutation (version bump).
+        self._prefetch_lookup: Dict[int, tuple] = {}
         self._next_migration_s = self.ec.migration_interval_s
 
         self._state = self.api.init_state(cfg, self.ec.max_slots, self.ec.max_len)
         self._jit_prefill = jax.jit(self._prefill_impl)
         self._jit_decode = jax.jit(self._decode_impl)
+        self._jit_packed = (
+            jax.jit(self._packed_prefill_impl)
+            if self.api.prefill_packed is not None
+            else None
+        )
+        self._packable = (
+            self.api.prefill_packed is not None
+            and paged.packable_arch(cfg, self.ec.max_len)
+        )
+        # packed-admission observability (benchmarks assert on these)
+        self.jit_stats = JitBucketStats()
+        self.batches = 0
+        self.packed_q_tokens = 0  # useful tokens through the packed kernel
+        self.packed_q_len = 0  # padded (bucketed) tokens launched
+        self.lookup_walks = 0  # real trie walks
+        self.lookup_reuses = 0  # admissions served from the prefetch walk
+        self.admission_busy_s = 0.0  # modeled time spent in load+prefill
 
     # ------------------------------------------------------------------ #
     # jit'd compute
     # ------------------------------------------------------------------ #
     def _prefill_impl(self, params, tokens, state, embeds=None):
         return self.api.prefill(params, self.cfg, tokens, state, embeds=embeds)
+
+    def _packed_prefill_impl(
+        self, params, tokens, caches, q_pos, q_seg, q_rows, kv_pos, kv_seg, last_idx
+    ):
+        return self.api.prefill_packed(
+            params, self.cfg, tokens, caches,
+            q_pos=q_pos, q_seg=q_seg, q_rows=q_rows,
+            kv_pos=kv_pos, kv_seg=kv_seg, last_idx=last_idx,
+        )
 
     def _decode_impl(self, params, tokens, state, active):
         logits, new_state = self.api.decode(params, self.cfg, tokens, state)
@@ -192,13 +262,14 @@ class ServingEngine:
 
     def step(self) -> List[ev.Event]:
         """Advance the engine by one scheduling step and return its events:
-        admit one request if a slot and an arrived request exist, else run one
-        batched decode step, else jump the clock to the next arrival.  A due
-        migration pass (EngineConfig.migration_interval_s) piggybacks on the
-        step and surfaces as TierMigrated events."""
+        admit every admissible request with a free slot as one packed batch
+        (one ragged suffix-prefill launch), else run one batched decode step,
+        else jump the clock to the next arrival.  A due migration pass
+        (EngineConfig.migration_interval_s) piggybacks on the step and
+        surfaces as TierMigrated events."""
         events: List[ev.Event] = []
         self._run_migrations(events)
-        if self._admit_one(events):
+        if self._admit_batch(events):
             return events
         if any(s.active for s in self.slots):
             self._decode_step(events)
@@ -255,22 +326,59 @@ class ServingEngine:
             )
 
     # ------------------------------------------------------------------ #
-    # Admission: pop -> plan -> execute plan
+    # Admission: pop -> plan (per request) -> execute (one packed batch)
     # ------------------------------------------------------------------ #
-    def _free_slot(self) -> Optional[Slot]:
-        for s in self.slots:
-            if not s.active:
-                return s
-        return None
+    def _free_slots(self) -> List[Slot]:
+        return [s for s in self.slots if not s.active]
 
-    def _admit_one(self, events: List[ev.Event]) -> bool:
-        slot = self._free_slot()
-        if slot is None:
+    def _admit_batch(self, events: List[ev.Event]) -> bool:
+        """Admit every admissible request with a free slot (up to
+        ``admit_batch``): plan each individually, then execute all packable
+        suffix-prefills as ONE packed ragged kernel launch.  Requests the
+        packed path cannot carry (SSM/hybrid/enc-dec state, embeds, ring
+        caches) fall back to the per-request path, one per step."""
+        free = self._free_slots()
+        if not free:
             return False
-        req = self.queue.pop_admissible(self.clock.now)
-        if req is None:
+        limit = min(len(free), self.ec.admit_batch or self.ec.max_slots)
+        reqs: List[Request] = []
+        while len(reqs) < limit:
+            nxt = self.queue.peek_next(self.clock.now)
+            if nxt is None:
+                break
+            if not (self._packable and nxt.embeds is None):
+                if reqs:
+                    break  # pack what we have; the odd one waits a step
+                req = self.queue.pop_admissible(self.clock.now)
+                return self._admit_single(req, free[0], events)
+            reqs.append(self.queue.pop_admissible(self.clock.now))
+        if not reqs:
             return False
 
+        # Plan sequentially, carrying each planned fetch's bytes forward so
+        # batch-mate i's predicted queue wait sees mates 0..i-1 on the same
+        # contended link — at execute time their reservations land in this
+        # order at one shared instant, and the planner must price that.
+        pending: Dict[str, List[float]] = {}
+        admissions: List[_Admission] = []
+        for req, slot in zip(reqs, free):
+            a = self._plan_admission(req, slot, events, pending=pending)
+            admissions.append(a)
+            if a.plan.loads_kv and a.lookup.entry is not None:
+                pending.setdefault(a.lookup.entry.tier, []).append(
+                    self._entry_fetch_bytes(a.lookup.entry, a.plan.matched_tokens)
+                )
+        self._execute_packed(admissions, events)
+        self._issue_prefetches()
+        return True
+
+    def _plan_admission(
+        self,
+        req: Request,
+        slot: Slot,
+        events: List[ev.Event],
+        pending: Optional[Dict[str, List[float]]] = None,
+    ):
         rec = RequestRecord(
             req_id=req.req_id,
             arrival_s=req.arrival_s,
@@ -286,8 +394,7 @@ class ServingEngine:
                 queue_s=rec.queue_s,
             )
         )
-
-        lookup = self._lookup(req)
+        lookup = self._lookup(req, pending)
         workload = Workload(
             L_context=len(req.context_tokens),
             L_prompt=len(req.prompt_tokens),
@@ -297,15 +404,39 @@ class ServingEngine:
         )
         plan = self.planner.plan(req, lookup, workload)
         events.append(ev.PlanChosen(t_s=self.clock.now, req_id=req.req_id, plan=plan))
+        return _Admission(req=req, rec=rec, slot=slot, plan=plan, lookup=lookup)
 
-        if plan.loads_kv and lookup.entry is not None:
-            load_s, prefill_s, logits, temp = self._execute_load(
-                req, plan, lookup, events
+    def _finish_admission(
+        self, a: "_Admission", first_tok: int, events: List[ev.Event]
+    ) -> None:
+        """Shared admission epilogue (post clock-advance): record fields that
+        are common to both execute paths, emit the first token, activate."""
+        a.rec.action = a.plan.action if a.plan.loads_kv else "recompute"
+        a.rec.plan = a.plan
+        a.rec.tokens.append(first_tok)
+        events.append(
+            ev.TokenEmitted(
+                t_s=self.clock.now, req_id=a.req.req_id, token=first_tok, index=0
             )
-            matched = plan.matched_tokens
+        )
+        a.slot.request = a.req
+        a.slot.record = a.rec
+        a.slot.generated = 1
+        a.slot.last_token = first_tok
+        a.slot.active = True
+        self._maybe_finish(a.slot, events)
+
+    # -- per-request (fallback) execution ------------------------------- #
+    def _admit_single(self, req: Request, slot: Slot, events: List[ev.Event]) -> bool:
+        a = self._plan_admission(req, slot, events)
+        if a.plan.loads_kv and a.lookup.entry is not None:
+            load_s, prefill_s, logits, temp = self._execute_load(
+                req, a.plan, a.lookup, events
+            )
+            matched = a.plan.matched_tokens
         else:
             load_s, matched = 0.0, 0
-            prefill_s, logits, temp = self._execute_recompute(req, plan, events)
+            prefill_s, logits, temp = self._execute_recompute(req, a.plan, events)
         self._release_prefetch(req.req_id)
 
         # ---- install into the batch slot ------------------------------- #
@@ -313,32 +444,184 @@ class ServingEngine:
         first_tok = int(jnp.argmax(logits[0]))
 
         self.clock.advance(load_s + prefill_s)
-        rec.action = plan.action if plan.loads_kv else "recompute"
-        rec.plan = plan
-        rec.matched_tokens = matched
-        rec.load_s = load_s
-        rec.prefill_s = prefill_s
-        rec.compute_cost += self._c_gpu_s * prefill_s
-        rec.tokens.append(first_tok)
-        events.append(
-            ev.TokenEmitted(t_s=self.clock.now, req_id=req.req_id, token=first_tok, index=0)
-        )
-
-        slot.request = req
-        slot.record = rec
-        slot.generated = 1
-        slot.last_token = first_tok
-        slot.active = True
-        self._maybe_finish(slot, events)
+        self.admission_busy_s += load_s + prefill_s
+        a.rec.matched_tokens = matched
+        a.rec.load_s = load_s
+        a.rec.prefill_s = prefill_s
+        a.rec.compute_cost += self._c_gpu_s * prefill_s
+        self._finish_admission(a, first_tok, events)
         self._issue_prefetches()
         return True
 
-    def _lookup(self, req: Request) -> StoreLookup:
+    # -- packed batch execution ----------------------------------------- #
+    def _execute_packed(
+        self, admissions: List["_Admission"], events: List[ev.Event]
+    ) -> None:
+        """Execute a whole admission batch as one packed ragged suffix-prefill:
+        per-request storage fetches (queueing on contended links is modeled at
+        the shared admission instant), one kernel launch over the concatenated
+        token runs, outputs scattered back into each request's batch slot."""
+        t0 = self.clock.now
+        for a in admissions:
+            if a.plan.loads_kv and a.lookup.entry is not None:
+                a.artifact, a.delay, a.nbytes = self._fetch_kv(a.req, a.plan, a.lookup)
+                a.matched = a.plan.matched_tokens
+            self._release_prefetch(a.req.req_id)
+            ctx = list(a.req.context_tokens)
+            a.new_tokens = ctx[a.matched:] + list(a.req.prompt_tokens)
+
+        layout = paged.pack_layout(
+            [a.slot.index for a in admissions],
+            [a.matched for a in admissions],
+            [len(a.new_tokens) for a in admissions],
+            align=self.ec.pack_align,
+            bucket_min=self.ec.pack_bucket_min,
+        )
+        arrays = paged.pack_arrays(layout, [a.new_tokens for a in admissions])
+        caches = paged.build_packed_caches(
+            self.cfg, layout, [a.artifact for a in admissions]
+        )
+        last_idx = np.zeros((self.ec.max_slots,), np.int32)
+        for i, seg in enumerate(layout.segments):
+            last_idx[i] = seg.q_last
+        jit_hit = self.jit_stats.record((layout.q_len, layout.kv_len))
+        self.batches += 1
+        self.packed_q_tokens += layout.q_tokens
+        self.packed_q_len += layout.q_len
+        events.append(
+            ev.BatchAdmitted(
+                t_s=t0, req_id=-1,
+                req_ids=tuple(a.req.req_id for a in admissions),
+                q_tokens=layout.q_tokens, q_len=layout.q_len,
+                kv_len=layout.kv_len, jit_hit=jit_hit,
+            )
+        )
+
+        logits, new_caches = self._jit_packed(
+            self.params,
+            jnp.asarray(arrays["tokens"]),
+            caches,
+            jnp.asarray(arrays["q_pos"]),
+            jnp.asarray(arrays["q_seg"]),
+            jnp.asarray(arrays["q_rows"]),
+            jnp.asarray(arrays["kv_pos"]),
+            jnp.asarray(arrays["kv_seg"]),
+            jnp.asarray(last_idx),
+        )
+
+        lens = [len(a.new_tokens) for a in admissions]
+        prefill_s = self.perf.t_prefill_packed(self.cost_cfg, lens)
+        total_new = sum(lens)
+        written = set()  # contexts written back within THIS batch (dedup:
+        # several batch-mates recomputing the same context store it once)
+        for a, seg in zip(admissions, layout.segments):
+            if a.artifact is not None:
+                a.load_s = (
+                    max(0.0, a.delay - prefill_s) if self.ec.overlap_load else a.delay
+                )
+                # KVLoaded carries THIS request's own fetch remainder; the
+                # batch-barrier wait it actually experiences lands on the
+                # record below.
+                events.append(
+                    ev.KVLoaded(
+                        t_s=t0, req_id=a.req.req_id, tier=a.lookup.entry.tier,
+                        nbytes=a.nbytes, load_s=a.load_s,
+                        matched_tokens=a.matched,
+                    )
+                )
+            elif a.plan.store_after and tuple(a.req.context_tokens) not in written:
+                written.add(tuple(a.req.context_tokens))
+                ctx_len = len(a.req.context_tokens)
+                art = paged.packed_to_artifact(self.cfg, new_caches, seg, ctx_len)
+                self._write_back(a.req, jax.tree_util.tree_map(np.asarray, art), events)
+            events.append(
+                ev.PrefillDone(
+                    t_s=t0, req_id=a.req.req_id,
+                    n_tokens=len(a.new_tokens), prefill_s=prefill_s,
+                )
+            )
+
+        batch_load = max((a.load_s for a in admissions), default=0.0)
+        self.clock.advance(batch_load + prefill_s)
+        self.admission_busy_s += batch_load + prefill_s
+
+        for i, (a, seg) in enumerate(zip(admissions, layout.segments)):
+            self._state = paged.insert_slot(
+                self.cfg, self._state, seg.slot,
+                paged.packed_to_artifact(self.cfg, new_caches, seg, seg.n_total),
+            )
+            a.rec.matched_tokens = a.matched
+            # every batch member waits the load BARRIER (max of the batch's
+            # fetches) before the shared kernel: record the realized wait so
+            # ttft_s agrees with the TokenEmitted timeline and the SLO audit
+            a.rec.load_s = batch_load
+            a.rec.prefill_s = prefill_s
+            a.rec.compute_cost += (
+                self._c_gpu_s * prefill_s * (len(a.new_tokens) / total_new)
+            )
+            self._finish_admission(a, int(jnp.argmax(logits[i])), events)
+
+    def _fetch_kv(self, req: Request, plan: ReusePlan, lookup: StoreLookup):
+        """Charge + execute the storage fetch of a load/partial plan; returns
+        (artifact, delay_s, billed_nbytes).  A lookahead prefetch already in
+        flight shrinks the delay to its unfinished remainder."""
+        entry = lookup.entry
+        matched = plan.matched_tokens
+        nbytes = plan.fetch_bytes
+        override = None
+        if self.cost_cfg is not self.cfg:
+            # economics-at-scale: charge the FULL arch's KV bytes, and occupy
+            # the tier's link for them — queueing under burst (concurrency-
+            # limited backends) is modeled at the same scale as the delay.
+            nbytes = self._entry_fetch_bytes(entry, matched)
+            override = nbytes
+        artifact, delay = self.store.fetch(
+            entry.entry_id, fraction=matched / entry.n_tokens, nbytes=override
+        )
+        ready = self._prefetch_ready.pop(req.req_id, None)
+        if ready is not None:
+            # fetch was issued while earlier requests were being served:
+            # only the unfinished remainder delays this request.
+            delay = max(0.0, min(delay, ready - self.clock.now))
+        return artifact, delay, nbytes
+
+    def _write_back(self, req: Request, artifact: Any, events: List[ev.Event]) -> None:
+        ctx = list(req.context_tokens)
+        saved = self._c_gpu_s * self.perf.t_prefill(self.cost_cfg, len(ctx))
+        entry_id, _ = self.store.put(
+            ctx, artifact, tier=self._store_tier(), saved_per_use=saved
+        )
+        # capacity-pressure spills triggered by this put surface now, at
+        # their own timestamp, not at the next step's drain
+        self._emit_migrations(events)
+        if entry_id is not None:
+            e = self.store.entries[entry_id]
+            events.append(
+                ev.StoreWriteBack(
+                    t_s=self.clock.now, req_id=req.req_id,
+                    entry_id=entry_id, tier=e.tier, nbytes=e.nbytes,
+                )
+            )
+
+    def _lookup(
+        self, req: Request, pending: Optional[Dict[str, List[float]]] = None
+    ) -> StoreLookup:
         """Consult the store about the request's context; quantify how much of
-        it the architecture can actually consume."""
+        it the architecture can actually consume.  A lookup already walked by
+        the prefetch pass is carried forward (no second trie walk) as long as
+        the store's trie has not mutated since.  ``pending`` — per-tier fetch
+        bytes already planned by earlier batch-mates this admission instant,
+        folded into the predicted queue wait."""
         if not self.ec.reuse_enabled:
             return StoreLookup.miss()
-        match, entry = self.store.lookup(list(req.context_tokens))
+        cached = self._prefetch_lookup.pop(req.req_id, None)
+        if cached is not None and cached[2] == self.store.trie_version:
+            match = cached[0]
+            entry = self.store.entries.get(cached[1]) if cached[1] else None
+            self.lookup_reuses += 1
+        else:
+            match, entry = self.store.lookup(list(req.context_tokens))
+            self.lookup_walks += 1
         partial_ok = paged.partial_reuse_allowed(self.cfg) and req.embeds is None
         frac = 0.0
         n_ctx = len(req.context_tokens)
@@ -351,8 +634,11 @@ class ServingEngine:
         if entry is not None and frac > 0:
             # contended-link visibility for the planner: predicted queueing
             # delay on the entry's tier (0 on uncontended links)
+            ahead = () if pending is None else tuple(pending.get(entry.tier, ()))
             wait = self.store.estimated_queue_wait(
-                entry.tier, self._entry_fetch_bytes(entry, match.matched_tokens)
+                entry.tier,
+                self._entry_fetch_bytes(entry, match.matched_tokens),
+                pending=ahead,
             )
             if wait > 0:
                 queue_wait[entry.tier] = wait
@@ -382,22 +668,7 @@ class ServingEngine:
         entry = lookup.entry
         matched = plan.matched_tokens
         temp = self.api.init_state(self.cfg, 1, self.ec.max_len)
-        nbytes = plan.fetch_bytes
-        override = None
-        if self.cost_cfg is not self.cfg:
-            # economics-at-scale: charge the FULL arch's KV bytes, and occupy
-            # the tier's link for them — queueing under burst (concurrency-
-            # limited backends) is modeled at the same scale as the delay.
-            nbytes = self._entry_fetch_bytes(entry, matched)
-            override = nbytes
-        artifact, delay = self.store.fetch(
-            entry.entry_id, fraction=matched / entry.n_tokens, nbytes=override
-        )
-        ready = self._prefetch_ready.pop(req.req_id, None)
-        if ready is not None:
-            # fetch was issued while earlier requests were being served:
-            # only the unfinished remainder delays this request.
-            delay = max(0.0, min(delay, ready - self.clock.now))
+        artifact, delay, nbytes = self._fetch_kv(req, plan, lookup)
         temp = paged.insert_slot(self.cfg, temp, 0, artifact, n_tokens=matched)
         ctx = list(req.context_tokens)
         tail = [] if req.embeds is not None else ctx[matched:]
@@ -430,23 +701,9 @@ class ServingEngine:
         """Full prefill; write the context state back iff the plan says so."""
         ctx, prompt = list(req.context_tokens), list(req.prompt_tokens)
         temp = self.api.init_state(self.cfg, 1, self.ec.max_len)
-        saved = self._c_gpu_s * self.perf.t_prefill(self.cost_cfg, len(ctx))
 
         def write_back(artifact):
-            entry_id, _ = self.store.put(
-                ctx, artifact, tier=self._store_tier(), saved_per_use=saved
-            )
-            # capacity-pressure spills triggered by this put surface now, at
-            # their own timestamp, not at the next step's drain
-            self._emit_migrations(events)
-            if entry_id is not None:
-                e = self.store.entries[entry_id]
-                events.append(
-                    ev.StoreWriteBack(
-                        t_s=self.clock.now, req_id=req.req_id,
-                        entry_id=entry_id, tier=e.tier, nbytes=e.nbytes,
-                    )
-                )
+            self._write_back(req, artifact, events)
 
         if req.embeds is not None:
             # VLM/audio context: the context IS the embeddings. Single
@@ -486,7 +743,19 @@ class ServingEngine:
         for nxt in self.queue.peek_arrived(self.clock.now, self.ec.prefetch_lookahead):
             if nxt.req_id in self._prefetch_ready:
                 continue
+            cached = self._prefetch_lookup.get(nxt.req_id)
+            if cached is not None and cached[2] == self.store.trie_version:
+                # an earlier pass already walked this context and the trie has
+                # not mutated since — necessarily a miss (hits sit in
+                # _prefetch_ready above), so there is nothing new to fetch
+                continue
             m, e = self.store.lookup(list(nxt.context_tokens))
+            self.lookup_walks += 1
+            # carry this walk forward to admission (hits AND misses): the
+            # admission-time lookup reuses it unless the trie mutated since
+            self._prefetch_lookup[nxt.req_id] = (
+                m, e.entry_id if e is not None else None, self.store.trie_version
+            )
             if e is None or m.matched_tokens == 0:
                 continue
             nbytes = self._entry_fetch_bytes(e, m.matched_tokens)
@@ -502,9 +771,25 @@ class ServingEngine:
         """Admission consumed (or abandoned) this request's prefetch: drop the
         ready-time record and release the eviction pin."""
         self._prefetch_ready.pop(req_id, None)
+        self._prefetch_lookup.pop(req_id, None)
         entry_id = self._prefetch_pins.pop(req_id, None)
         if entry_id is not None:
             self.store.unpin(entry_id)
+
+    def packed_stats(self) -> Dict[str, Any]:
+        """Packed-admission counters: jit bucket hit/miss, packing occupancy,
+        trie-walk savings, and modeled admission busy time (the denominator
+        of admission throughput)."""
+        return {
+            "jit": self.jit_stats.as_dict(),
+            "batches": self.batches,
+            "packed_q_tokens": self.packed_q_tokens,
+            "packed_q_len": self.packed_q_len,
+            "occupancy": self.packed_q_tokens / max(self.packed_q_len, 1),
+            "lookup_walks": self.lookup_walks,
+            "lookup_reuses": self.lookup_reuses,
+            "admission_busy_s": self.admission_busy_s,
+        }
 
     def _store_tier(self) -> str:
         if self.ec.store_tier is not None:

@@ -45,6 +45,20 @@ class PlanChosen(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class BatchAdmitted(Event):
+    """One packed admission batch (req_id is -1: the batch is an engine-level
+    act; each member request still gets its own RequestAdmitted/PlanChosen).
+    ``q_tokens``/``q_len`` expose packing occupancy, ``jit_hit`` whether the
+    (q_len, kv_len) bucket reused an already-compiled kernel."""
+
+    req_ids: tuple
+    q_tokens: int  # useful new tokens across all segments
+    q_len: int  # bucketed (padded) packed q length
+    kv_len: int  # bucketed packed kv length
+    jit_hit: bool
+
+
+@dataclasses.dataclass(frozen=True)
 class KVLoaded(Event):
     tier: str
     nbytes: float
@@ -94,8 +108,8 @@ class TierMigrated(Event):
 
 
 AnyEvent = Union[
-    RequestAdmitted, PlanChosen, KVLoaded, PrefillDone, StoreWriteBack,
-    TokenEmitted, RequestFinished, ClockAdvanced, TierMigrated,
+    RequestAdmitted, PlanChosen, BatchAdmitted, KVLoaded, PrefillDone,
+    StoreWriteBack, TokenEmitted, RequestFinished, ClockAdvanced, TierMigrated,
 ]
 
 

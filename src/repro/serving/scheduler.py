@@ -71,6 +71,12 @@ class AdmissionQueue:
             cands.append(self._pending[0][0])
         return min(cands, default=None)
 
+    def peek_next(self, now: float) -> Optional[Request]:
+        """The request ``pop_admissible(now)`` would return, without removing
+        it — O(1) (heap root), unlike ``peek_arrived`` which sorts."""
+        self._promote(now)
+        return self._ready[0][3] if self._ready else None
+
     def peek_arrived(self, now: float, limit: int = 4) -> List[Request]:
         """Arrived-but-unadmitted requests in admission order (no removal) —
         the prefetch lookahead window."""

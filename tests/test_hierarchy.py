@@ -125,6 +125,24 @@ class TestConcurrencyLimit:
         _, h3 = b.get("a")
         assert predicted == pytest.approx(h3.queue_s) and predicted > 0
 
+    def test_estimated_wait_sees_pending_batch_mates(self):
+        """Batch-planning surface: with ``pending`` byte sizes of same-instant
+        fetches ahead of this one, the prediction at each burst position
+        matches the queue_s each fetch then actually accrues (limit-2 link,
+        4 batch-mates — positions 2 and 3 queue behind the first two)."""
+        clock = SimClock()
+        inner = ObjectStoreBackend("s3", transfer=_transfer(), clock=clock)
+        b = ConcurrencyLimitedBackend(inner, 2, clock=clock)
+        b.put("a", object(), nbytes=GB, charge=False)
+        sizes = [GB] * 4
+        predicted = [
+            b.estimated_wait(sz, pending=sizes[:i]) for i, sz in enumerate(sizes)
+        ]
+        realized = [b.get("a")[1].queue_s for _ in sizes]
+        assert predicted == pytest.approx(realized)
+        assert predicted[0] == predicted[1] == 0.0
+        assert predicted[2] > 0.0 and predicted[3] > 0.0
+
     def test_queue_drains_with_the_clock(self):
         clock = SimClock()
         inner = ObjectStoreBackend("s3", transfer=_transfer(), clock=clock)
@@ -217,6 +235,53 @@ class TestMigration:
         s.run_migrations()
         assert len(s.drain_migrations()) == 1
         assert s.drain_migrations() == []
+
+    def test_banded_pass_matches_full_scan_on_many_entries(self):
+        """Regression for the O(entries x tiers) tick: the band-indexed pass
+        must produce exactly the moves of an exhaustive scan while actually
+        skipping the steady entries.  Two identically-driven stores — one
+        banded (default), one full_scan=True — across two passes with a hot
+        subset heating up in between."""
+        N, HOT = 60, 10
+
+        def mk():
+            s = _store(HIER, migration=BreakEvenMigrator())
+            for i in range(N):
+                eid, _ = s.put(
+                    list(range(i * 100, i * 100 + 8)), _art(i), tier="s3"
+                )
+                assert eid is not None
+            return s
+
+        sa, sb = mk(), mk()  # banded vs exhaustive
+
+        def moves(migs):
+            return [(m.entry_id, m.from_tier, m.to_tier, m.reason) for m in migs]
+
+        for s in (sa, sb):
+            s.clock.advance(3600.0)
+        assert moves(sa.run_migrations()) == moves(
+            sb.run_migrations(full_scan=True)
+        )
+        # heat a subset: their reuse-frequency band jumps, the rest stay put
+        for s in (sa, sb):
+            s.clock.advance(3600.0)
+            for i in range(HOT):
+                eid = f"ctx{i}"
+                for _ in range(50):
+                    s.fetch(eid)
+        evals_before = sa.migration_evals
+        ma, mb = sa.run_migrations(), sb.run_migrations(full_scan=True)
+        assert moves(ma) == moves(mb) and len(ma) == HOT  # hot set promotes
+        # the banded pass only re-evaluated the entries whose band changed
+        assert sa.migration_evals - evals_before == HOT
+        assert sa.migration_skips >= N - HOT
+        assert sb.migration_skips == 0
+        assert {e: sa.entries[e].tier for e in sa.entries} == {
+            e: sb.entries[e].tier for e in sb.entries
+        }
+        check_invariants(sa)
+        check_invariants(sb)
 
 
 def test_spill_on_pressure_demotes_instead_of_evicting():
