@@ -1,8 +1,10 @@
 """Serving throughput benchmark: burst + steady-state workloads through the
-packed batch-admission engine, vs single-request admission.
+packed batch-admission engine (vs single-request admission), plus a
+decode-bound workload through paged block-pool decode (vs dense decode).
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--requests N]
-        [--steady-requests N] [--slots K] [--out BENCH_serving.json]
+        [--steady-requests N] [--slots K] [--decode-requests N]
+        [--decode-slots K] [--out BENCH_serving.json]
 
 Numerics run the reduced config on CPU; times/costs are modeled at
 ``--cost-arch`` scale (paper-style V100x4 + AWS pricing), so requests/s and
@@ -13,8 +15,12 @@ TTFT are economics-model numbers, not CPU wall clock.  Emits
     horizon, admission throughput (requests / modeled load+prefill busy
     time), mean/p95 TTFT, packed-prefill occupancy, jit bucket hit rate,
     trie-walk savings;
+  * the ``decode`` workload (long generations, short prompts, ragged warm
+    contexts), per-mode (paged vs dense): decode tokens/s over modeled
+    decode busy time, pool block usage, shared-prefix block hits;
   * ``speedup``: packed-over-single admission-throughput ratio per workload
-    (the PR's headline number; CI smoke asserts >= 2x on the burst).
+    (CI smoke asserts >= 2x on the burst) and the paged-over-dense decode
+    tokens/s ratio (CI smoke asserts >= 1.5x; tokens must be identical).
 """
 from __future__ import annotations
 
@@ -103,6 +109,80 @@ def _serve(cfg, params, reqs, *, slots, cost_arch, admit_batch, warmup=None):
     }
 
 
+# ctx length pool for the decode-bound workload: ragged on purpose — dense
+# decode bills every slot the LONGEST slot's KV stream, paged decode bills
+# each slot its own live blocks, and the spread is where the win lives.
+DECODE_CTX_LENS = [128, 256, 384, 512, 768, 1024, 1536, 2048]
+
+
+def _serve_decode(cfg, params, *, n, slots, cost_arch, paged, seed):
+    """Decode-bound workload: long generations off short prompts against a
+    WARM ragged context store.  A spaced warm wave ingests the contexts
+    (admission-bound, unmeasured); the measured burst then loads its context
+    KV and spends its life decoding — tokens/s over modeled decode busy time
+    is the paged-vs-dense comparison (numerics are identical by contract)."""
+    import jax  # noqa: F401
+
+    from repro.core.perf_model import PerfModel, V100_X4_HF
+    from repro.core.pricing import AWS_PAPER
+    from repro.serving import AlwaysReusePlanner, EngineConfig, Request, ServingEngine
+
+    prompt_len, new = 8, 48
+    max_len = -(-(max(DECODE_CTX_LENS) + prompt_len + new) // 128) * 128
+    warm = _requests(
+        cfg, n=len(DECODE_CTX_LENS), n_ctx=len(DECODE_CTX_LENS), ctx_len=1,
+        prompt_len=prompt_len, new=1,
+        arrivals=[40.0 * i for i in range(len(DECODE_CTX_LENS))], seed=seed,
+    )
+    ctx_rng = np.random.default_rng(seed + 100)
+    ctxs = [
+        list(map(int, ctx_rng.integers(0, cfg.vocab, L))) for L in DECODE_CTX_LENS
+    ]
+    for r, ctx in zip(warm, ctxs):
+        r["context_tokens"] = ctx
+    reqs = _requests(
+        cfg, n=n, n_ctx=len(ctxs), ctx_len=1, prompt_len=prompt_len, new=new,
+        arrivals=[0.0] * n, seed=seed + 1,
+    )
+    for i, r in enumerate(reqs):
+        r["context_tokens"] = ctxs[i % len(ctxs)]
+
+    ec = EngineConfig(
+        max_slots=slots, max_len=max_len, chunk_tokens=16,
+        cost_arch=cost_arch, paged_decode=paged,
+    )
+    eng = ServingEngine(
+        cfg, params, engine_cfg=ec, planner=AlwaysReusePlanner(),
+        pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF),
+    )
+    for r in warm:
+        eng.submit(Request(**r))
+    eng.run()
+    assert eng.decode_tokens == 0  # warm wave is admission-only
+    t0 = eng.clock.now
+    n_warm = len(eng.records)
+    for r in reqs:
+        eng.submit(Request(**{**r, "arrival_s": r["arrival_s"] + t0}))
+    eng.run()
+    records = eng.records[n_warm:]
+    stats = eng.decode_stats()
+    out = {
+        "n_requests": len(records),
+        "decode_tokens": stats["decode_tokens"],
+        "decode_busy_s": stats["decode_busy_s"],
+        "decode_tokens_per_s": stats["decode_tokens"] / max(
+            stats["decode_busy_s"], 1e-12
+        ),
+        "reuse_hits": sum(1 for r in records if r.action in ("load", "partial")),
+        "paged": stats["paged"],
+    }
+    if paged:
+        out["pool_blocks"] = stats["pool_blocks"]  # capacity
+        out["pool_blocks_peak"] = stats["pool_blocks_peak"]  # high-water usage
+        out["shared_block_hits"] = stats["shared_block_hits"]
+    return out, {r.req_id: r.tokens for r in records}
+
+
 def run(
     n_burst: int = 24,
     n_steady: int = 24,
@@ -110,6 +190,8 @@ def run(
     arch: str = "llama-7b",
     cost_arch: str = "llama-7b",
     seed: int = 0,
+    n_decode: int = 32,
+    decode_slots: int = 32,
 ) -> Dict:
     import jax
 
@@ -165,9 +247,26 @@ def run(
             packed["admission_throughput_rps"]
             / max(single["admission_throughput_rps"], 1e-12)
         )
+    # decode-bound phase: paged block-pool decode vs dense, same numerics
+    paged_d, toks_p = _serve_decode(
+        cfg, params, n=n_decode, slots=decode_slots, cost_arch=cost_arch,
+        paged=True, seed=seed,
+    )
+    dense_d, toks_d = _serve_decode(
+        cfg, params, n=n_decode, slots=decode_slots, cost_arch=cost_arch,
+        paged=False, seed=seed,
+    )
+    assert toks_p == toks_d, "paged decode must be token-identical to dense"
+    results["workloads"]["decode"] = {"paged": paged_d, "dense": dense_d}
+    results["speedup"]["decode_tokens_per_s"] = (
+        paged_d["decode_tokens_per_s"] / max(dense_d["decode_tokens_per_s"], 1e-12)
+    )
+
     results["config"] = {
         "arch": arch, "cost_arch": cost_arch, "slots": slots,
         "n_burst": n_burst, "n_steady": n_steady,
+        "n_decode": n_decode, "decode_slots": decode_slots,
+        "decode_ctx_lens": DECODE_CTX_LENS,
     }
     return results
 
@@ -177,6 +276,9 @@ def main() -> List[str]:
     ap.add_argument("--requests", type=int, default=24, help="burst workload size")
     ap.add_argument("--steady-requests", type=int, default=24)
     ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--decode-requests", type=int, default=32,
+                    help="decode-bound workload size")
+    ap.add_argument("--decode-slots", type=int, default=32)
     ap.add_argument("--arch", default="llama-7b")
     ap.add_argument("--cost-arch", default="llama-7b")
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -185,11 +287,14 @@ def main() -> List[str]:
     res = run(
         n_burst=args.requests, n_steady=args.steady_requests,
         slots=args.slots, arch=args.arch, cost_arch=args.cost_arch,
+        n_decode=args.decode_requests, decode_slots=args.decode_slots,
     )
     pathlib.Path(args.out).write_text(json.dumps(res, indent=2))
 
     lines = []
     for name, modes in res["workloads"].items():
+        if name == "decode":
+            continue
         p, s = modes["packed"], modes["single"]
         lines.append(
             f"{name}: packed {p['admission_throughput_rps']:.1f} req/s admission "
@@ -198,6 +303,13 @@ def main() -> List[str]:
             f"-> {res['speedup'][name]:.1f}x; "
             f"mean TTFT {p['mean_ttft_s']*1e3:.1f} ms vs {s['mean_ttft_s']*1e3:.1f} ms"
         )
+    d = res["workloads"]["decode"]
+    lines.append(
+        f"decode: paged {d['paged']['decode_tokens_per_s']:.1f} tok/s "
+        f"(shared blocks {d['paged']['shared_block_hits']}) "
+        f"vs dense {d['dense']['decode_tokens_per_s']:.1f} tok/s "
+        f"-> {res['speedup']['decode_tokens_per_s']:.2f}x"
+    )
     for ln in lines:
         print(ln)
 
@@ -211,6 +323,10 @@ def main() -> List[str]:
     # wave-scoped, like every other metric in the per-mode dict)
     assert steady["jit_misses"] == 0, (
         "steady-state serving kept recompiling:", steady)
+    # paged decode must beat dense decode >= 1.5x tokens/s on the ragged
+    # decode-bound workload (live-blocks HBM pricing vs padded batch * max)
+    dec = res["speedup"]["decode_tokens_per_s"]
+    assert dec >= 1.5, f"paged decode speedup {dec:.2f}x < 1.5x"
     print(f"wrote {args.out}")
     return lines
 

@@ -153,6 +153,34 @@ def decode_attention(
     )
 
 
+def paged_decode(
+    q: jax.Array,  # [B, 1, H, hd]
+    k_pool: jax.Array,  # [N_rows, KV, hd] — shared block pool, flat rows
+    v_pool: jax.Array,
+    *,
+    block_table: jax.Array,  # [B, nb] int32 pool-block id per sequence block
+    q_pos: jax.Array,  # [B, 1]
+    block: int = 128,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Decode attention gathering each sequence's live KV blocks from the
+    shared pool via its block table — see ``ref.paged_decode_ref`` for
+    semantics and the bit-exactness contract vs dense decode."""
+    use_pallas, interpret = _use_pallas()
+    if use_pallas:
+        from repro.kernels import paged_decode as pdk
+
+        if pdk.supported(q, k_pool, v_pool, block):
+            return pdk.paged_decode_attention(
+                q, k_pool, v_pool, block_table=block_table, q_pos=q_pos,
+                block=block, window=window, interpret=interpret,
+            )
+    return ref.paged_decode_ref(
+        q, k_pool, v_pool, block_table=block_table, q_pos=q_pos, block=block,
+        window=window,
+    )
+
+
 # --------------------------------------------------------------------------- #
 # KV-sequence-sharded flash attention (shard_map over the model axis)
 # --------------------------------------------------------------------------- #

@@ -150,6 +150,42 @@ def packed_attention_ref(
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+def paged_decode_ref(
+    q: jax.Array,  # [B, 1, H, hd] — one query token per sequence
+    k_pool: jax.Array,  # [N_rows, KV, hd] — the SHARED block pool, flat rows
+    v_pool: jax.Array,  # [N_rows, KV, hd]
+    *,
+    block_table: jax.Array,  # [B, nb] int32 pool-block id per sequence block
+    q_pos: jax.Array,  # [B, 1] position of the query token (== live len - 1)
+    block: int = 128,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Decode attention over a paged KV layout: each sequence's cache is the
+    concatenation of the ``block``-token pool blocks its ``block_table`` row
+    names, in table order.  Sequence position of row ``r`` of table entry
+    ``j`` is ``j*block + r`` by construction, so validity is purely
+    positional: rows past ``q_pos`` (tail of the boundary block, 0-padded
+    table entries pointing at the reserved dump block) mask out exactly as a
+    dense cache's unwritten tail does.  Gathering the live blocks into
+    sequence order and running ``attention_ref`` is therefore bit-identical
+    to dense decode over a slotted cache of the same padded length — the
+    exactness contract ``tests/test_paged_decode.py`` pins at every level.
+    """
+    B = q.shape[0]
+    nb = block_table.shape[1]
+    rows = (
+        block_table[:, :, None].astype(jnp.int32) * block
+        + jnp.arange(block, dtype=jnp.int32)[None, None, :]
+    ).reshape(B, nb * block)
+    k = k_pool[rows]  # [B, nb*block, KV, hd]
+    v = v_pool[rows]
+    idx = jnp.arange(nb * block, dtype=jnp.int32)[None]
+    kv_pos = jnp.where(idx <= q_pos.astype(jnp.int32), idx, -1)
+    return attention_ref(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True, window=window
+    )
+
+
 def causal_positions(batch: int, seq: int, offset=0) -> jax.Array:
     """[B, S] positions ``offset + arange(S)``; offset scalar or [B]."""
     pos = jnp.arange(seq, dtype=jnp.int32)[None, :]

@@ -15,7 +15,7 @@ Artifacts are host numpy pytrees (storage is host/remote by definition);
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -330,6 +330,226 @@ def pack_arrays(layout: PackLayout, new_tokens: List[List[int]]) -> dict:
         "tokens": tokens, "q_pos": q_pos, "q_seg": q_seg, "q_rows": q_rows,
         "kv_pos": kv_pos, "kv_seg": kv_seg,
     }
+
+
+# --------------------------------------------------------------------------- #
+# Shared KV block pool: paged batched decode state
+# --------------------------------------------------------------------------- #
+KV_BLOCK = 128  # pool block size in tokens (== the flash kernels' kv block)
+
+
+class BlockPool:
+    """Host-side bookkeeping for the shared device KV block pool.
+
+    Block ids index a single device array of ``n_blocks * block`` KV rows
+    shared by every batch slot.  Block 0 is the reserved *dump* block: a slot
+    whose block table is zeroed (freed/inactive) computes its decode write
+    row inside block 0, so a stale slot can never corrupt a block that has
+    been recycled to another sequence.
+
+    Blocks are reference-counted so batch-mates that loaded the same stored
+    context can point their table prefixes at ONE copy of the shared-prefix
+    blocks (write-back dedup carried into the pool).  ``release`` returns a
+    block to the free list exactly once — when its last reference drops —
+    and ``PagedSlots.prepare_append`` is the copy-on-write primitive:
+    appending into a shared boundary block first splits it onto a fresh
+    private block.  ``tests/test_paged_decode.py`` drives these invariants
+    with hypothesis.
+    """
+
+    def __init__(self, n_blocks: int, block: int = KV_BLOCK):
+        assert n_blocks >= 2, "need the dump block plus at least one real block"
+        self.block = block
+        self.n_blocks = n_blocks
+        self.ref = np.zeros(n_blocks, np.int64)
+        self.ref[0] = 1  # dump block: permanently held by the pool itself
+        self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        """Distinct non-dump blocks currently referenced."""
+        return self.n_blocks - 1 - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        assert n <= len(self._free), (n, len(self._free))
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            assert self.ref[b] == 0, b
+            self.ref[b] = 1
+        return out
+
+    def share(self, bid: int) -> int:
+        assert 0 < bid < self.n_blocks and self.ref[bid] > 0, bid
+        self.ref[bid] += 1
+        return bid
+
+    def release(self, bid: int) -> None:
+        assert 0 < bid < self.n_blocks and self.ref[bid] > 0, bid
+        self.ref[bid] -= 1
+        if self.ref[bid] == 0:
+            self._free.append(bid)
+
+    def free_list(self) -> List[int]:
+        return list(self._free)
+
+
+@dataclasses.dataclass(frozen=True)
+class CowSplit:
+    """A copy-on-write split: pool rows of ``src`` must be device-copied to
+    ``dst`` before the next write touches the block."""
+
+    src: int
+    dst: int
+
+
+class PagedSlots:
+    """Block tables + live lengths for a batch of slots over one BlockPool.
+
+    The engine's host-side view of the paged decode state: per-slot tables
+    (0-padded, fixed width ``max_len // block`` so every decode launch has
+    one static shape), live token counts, and the alloc/share/append/free
+    lifecycle.  Device arrays are the engine's; this class only decides
+    which pool blocks hold what.
+    """
+
+    def __init__(self, n_slots: int, max_len: int, block: int = KV_BLOCK):
+        assert max_len % block == 0, (max_len, block)
+        self.block = block
+        self.nb_max = max_len // block
+        # worst case every slot fills max_len with private blocks (+ dump)
+        self.pool = BlockPool(1 + n_slots * self.nb_max, block)
+        self.tables = np.zeros((n_slots, self.nb_max), np.int32)
+        self.lens = np.zeros(n_slots, np.int64)
+        self.n_blocks = np.zeros(n_slots, np.int64)  # table entries in use
+        self.live = np.zeros(n_slots, bool)
+        self.shared_block_hits = 0  # blocks deduped across batch-mates
+        self.pool_blocks_peak = 0  # high-water distinct blocks in use
+
+    def admit(
+        self,
+        slot: int,
+        n_total: int,
+        *,
+        shared_from: Optional[int] = None,
+        shared_blocks: int = 0,
+    ) -> List[int]:
+        """Allocate the slot's table for ``n_total`` live rows; the first
+        ``shared_blocks`` entries alias slot ``shared_from``'s (same stored
+        context, write-back dedup).  Returns the NEWLY allocated block ids —
+        the ones whose rows the caller must fill; shared blocks already hold
+        the right rows."""
+        assert not self.live[slot], slot
+        nb = -(-n_total // self.block)
+        assert 0 < nb <= self.nb_max, (n_total, self.nb_max)
+        assert shared_blocks <= nb
+        if shared_blocks:
+            assert shared_from is not None and self.live[shared_from]
+            assert shared_blocks <= self.n_blocks[shared_from]
+            for j in range(shared_blocks):
+                self.tables[slot, j] = self.pool.share(
+                    int(self.tables[shared_from, j])
+                )
+            self.shared_block_hits += shared_blocks
+        own = self.pool.alloc(nb - shared_blocks)
+        self.tables[slot, shared_blocks:nb] = own
+        self.tables[slot, nb:] = 0
+        self.lens[slot] = n_total
+        self.n_blocks[slot] = nb
+        self.live[slot] = True
+        self.pool_blocks_peak = max(self.pool_blocks_peak, self.pool.n_used)
+        return own
+
+    def prepare_append(self, slot: int) -> Optional[CowSplit]:
+        """Make the row for the NEXT token (position ``lens[slot]``) writable:
+        grow the table by a fresh block at a block boundary, copy-on-write
+        split a shared boundary block.  Returns the split to device-copy, or
+        None.  The caller bumps ``note_token`` after the write lands."""
+        assert self.live[slot], slot
+        pos = int(self.lens[slot])
+        ib = pos // self.block
+        assert ib < self.nb_max, "append past max_len"
+        if ib == self.n_blocks[slot]:
+            (bid,) = self.pool.alloc(1)
+            self.tables[slot, ib] = bid
+            self.n_blocks[slot] += 1
+            self.pool_blocks_peak = max(self.pool_blocks_peak, self.pool.n_used)
+            return None
+        bid = int(self.tables[slot, ib])
+        if self.pool.ref[bid] > 1:
+            (fresh,) = self.pool.alloc(1)
+            self.pool.release(bid)
+            self.tables[slot, ib] = fresh
+            return CowSplit(src=bid, dst=fresh)
+        return None
+
+    def note_token(self, slot: int) -> None:
+        self.lens[slot] += 1
+
+    def free(self, slot: int) -> None:
+        """Return the slot's blocks to the pool (each freed exactly once, on
+        its last reference) and zero its table AND length, so any stale
+        decode write computes a row inside the dump block (table entry 0)
+        without relying on out-of-range index clamping."""
+        assert self.live[slot], slot
+        for j in range(int(self.n_blocks[slot])):
+            self.pool.release(int(self.tables[slot, j]))
+        self.tables[slot, :] = 0
+        self.lens[slot] = 0
+        self.n_blocks[slot] = 0
+        self.live[slot] = False
+
+    # -- auditing (the hypothesis invariants) --------------------------- #
+    def audit(self) -> None:
+        """Pool-accounting invariants: ref counts == live table references,
+        free list disjoint + duplicate-free, and used pool bytes == bytes of
+        the live block-table entries (each distinct block counted once)."""
+        refs: dict = {}
+        for slot in range(self.tables.shape[0]):
+            if not self.live[slot]:
+                assert self.n_blocks[slot] == 0
+                assert not self.tables[slot].any(), slot
+                continue
+            for j in range(int(self.n_blocks[slot])):
+                bid = int(self.tables[slot, j])
+                assert bid > 0, (slot, j)
+                refs[bid] = refs.get(bid, 0) + 1
+        for bid in range(1, self.pool.n_blocks):
+            assert self.pool.ref[bid] == refs.get(bid, 0), bid
+        free = self.pool.free_list()
+        assert len(free) == len(set(free))
+        assert not (set(free) & set(refs)), "freed block still referenced"
+        assert self.pool.n_used == len(refs)
+
+
+def block_rows(block_ids, block: int) -> np.ndarray:
+    """Flat pool-row indices covered by ``block_ids`` (host-side helper for
+    the engine's single-scatter landings and CoW copies)."""
+    ids = np.asarray(list(block_ids), np.int64)
+    return (
+        ids[:, None] * block + np.arange(block, dtype=np.int64)[None, :]
+    ).reshape(-1)
+
+
+def init_pool_caches(
+    cfg: ArchConfig, n_blocks: int, block: int = KV_BLOCK, dtype=None
+) -> Any:
+    """Device-side shared KV block pool: one flat-row KV buffer per layer
+    kind, ``[n_periods, n_blocks * block, KV, hd]`` — the paged analogue of
+    ``lm.init_state``'s slotted-dense caches."""
+    from repro.models import common as common_mod
+    from repro.models.blocks import BlockCache
+
+    kinds, n_periods = _attn_kinds(cfg)
+    dtype = dtype or common_mod.resolve_dtype(cfg.dtype)
+    shape = (n_periods, n_blocks * block, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return tuple(
+        BlockCache(KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)), None)
+        for _ in kinds
+    )
 
 
 def packed_to_artifact(cfg: ArchConfig, caches: Any, seg: PackSegment, n: int) -> Any:

@@ -235,6 +235,48 @@ def decode(
 
 
 # --------------------------------------------------------------------------- #
+# Paged decode (one token per sequence against the shared block pool)
+# --------------------------------------------------------------------------- #
+def decode_paged(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # [B, 1, D]
+    pool: KVCache,  # k/v: [N_rows, KV, hd] — the SHARED block pool, flat rows
+    block_table: jax.Array,  # [B, nb] int32 pool-block id per sequence block
+    pos: jax.Array,  # [B] int32 — position of this token (== cached length)
+    *,
+    block: int,
+) -> Tuple[jax.Array, KVCache]:
+    """``decode`` over the paged layout: the new token's K/V rows scatter
+    into the pool at ``table[pos // block] * block + pos % block`` and
+    attention gathers each sequence's live blocks through its table
+    (``ops.paged_decode``).  A slot whose table is zeroed (freed/inactive)
+    writes onto the reserved dump block's rows — never into a block that may
+    have been recycled to another sequence.  Numerics are bit-identical to
+    ``decode`` against a slotted-dense cache (tests/test_paged_decode.py).
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(p, cfg, x)
+    positions = pos[:, None]  # [B, 1]
+    if cfg.rope_theta is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    blk = jnp.take_along_axis(
+        block_table.astype(jnp.int32), (pos // block)[:, None], axis=1
+    )[:, 0]
+    rows = blk * block + pos % block  # [B] — dump rows when blk == 0
+    pool = KVCache(
+        pool.k.at[rows].set(k_new[:, 0]), pool.v.at[rows].set(v_new[:, 0])
+    )
+    o = ops.paged_decode(
+        q, pool.k, pool.v, block_table=block_table, q_pos=positions,
+        block=block, window=cfg.sliding_window,
+    )
+    return _out(p, o), pool
+
+
+# --------------------------------------------------------------------------- #
 # Cross-attention (Whisper decoder): KV computed once from encoder output
 # --------------------------------------------------------------------------- #
 def init_cross_attention(key: jax.Array, cfg: ArchConfig) -> Params:

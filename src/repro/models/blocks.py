@@ -152,6 +152,29 @@ def prefill_packed(
     return x, BlockCache(kv, None), aux
 
 
+def decode_paged(
+    p: Params,
+    cfg: ArchConfig,
+    kind: BlockKind,
+    x: jax.Array,  # [B, 1, D]
+    cache: BlockCache,  # shared block-pool KV buffer (mixer must be "a")
+    block_table: jax.Array,  # [B, nb]
+    pos: jax.Array,  # [B]
+    *,
+    block: int,
+) -> Tuple[jax.Array, BlockCache]:
+    """Paged decode of one block — attention mixers only (SSM state is O(1)
+    per slot and gains nothing from paging; those archs keep dense decode)."""
+    assert kind.mixer == "a", "paged decode requires an attention mixer"
+    h = layers.apply_norm(p["norm1"], cfg, x)
+    out, kv = attention.decode_paged(
+        p["attn"], cfg, h, cache.attn, block_table, pos, block=block
+    )
+    x = x + out
+    x, _ = _apply_ffn(p, cfg, kind, x)
+    return x, BlockCache(kv, None)
+
+
 def decode(
     p: Params,
     cfg: ArchConfig,

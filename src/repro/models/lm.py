@@ -237,6 +237,50 @@ def decode(
 
 
 # --------------------------------------------------------------------------- #
+# Paged decode (one token per sequence over the shared KV block pool)
+# --------------------------------------------------------------------------- #
+def decode_paged(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,  # [B, 1]
+    caches: Tuple[blocks.BlockCache, ...],  # pool buffers (paged.init_pool_caches)
+    *,
+    block_table: jax.Array,  # [B, nb] int32 pool-block ids per sequence block
+    pos: jax.Array,  # [B] int32 — cached length per slot (0-padded tables for
+    # freed slots route their writes to the reserved dump block)
+    block: int = 128,
+) -> Tuple[jax.Array, Tuple[blocks.BlockCache, ...]]:
+    """``decode`` against the shared block pool instead of per-slot dense
+    caches: every layer's attention gathers exactly the live blocks each
+    slot's table names (``attention.decode_paged``).  Positions/tables are
+    host-managed by the caller (the serving engine), so only the pool
+    buffers flow through: returns (logits [B, V], updated caches) —
+    bit-identical logits to ``decode`` (tests/test_paged_decode.py)."""
+    kinds, _ = _layout(cfg)
+    assert all(k.mixer == "a" for k in kinds), (
+        "paged decode requires attention-only stacks", cfg.name)
+    x = _embed_inputs(params, cfg, tokens, None)
+
+    def period_fn(x, per):
+        layer_params, caches_ = per
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            x, c = blocks.decode_paged(
+                layer_params[i], cfg, kind, x, caches_[i], block_table, pos,
+                block=block,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        period_fn, x, (tuple(params["layers"]), caches), unroll=cfg.scan_unroll
+    )
+    x = layers.apply_norm(params["final_norm"], cfg, x)
+    logits = layers.lm_logits(params["embed"], cfg, x)[:, 0]
+    return logits, new_caches
+
+
+# --------------------------------------------------------------------------- #
 # Loss
 # --------------------------------------------------------------------------- #
 def cross_entropy(

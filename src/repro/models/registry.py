@@ -23,6 +23,10 @@ class ModelApi(NamedTuple):
     * prefill_packed(params, cfg, tokens, caches, **layout) -> (logits, caches)
       — packed ragged prefill across requests; None for families that cannot
       pack (enc-dec; SSM/hybrid stacks assert inside lm.prefill_packed).
+    * decode_paged(params, cfg, tokens, caches, block_table=, pos=, block=)
+      -> (logits, caches) — batched decode over the shared KV block pool
+      (kvcache/paged.py); None for families that cannot page (enc-dec;
+      SSM/hybrid stacks assert inside lm.decode_paged).
     """
 
     init: Callable[..., Any]
@@ -31,6 +35,7 @@ class ModelApi(NamedTuple):
     prefill: Callable[..., Any]
     decode: Callable[..., Any]
     prefill_packed: Optional[Callable[..., Any]] = None
+    decode_paged: Optional[Callable[..., Any]] = None
 
 
 def get_model(cfg: ArchConfig) -> ModelApi:
@@ -49,6 +54,7 @@ def get_model(cfg: ArchConfig) -> ModelApi:
         prefill=lm.prefill,
         decode=lm.decode,
         prefill_packed=lm.prefill_packed,
+        decode_paged=lm.decode_paged,
     )
 
 

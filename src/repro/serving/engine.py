@@ -114,6 +114,20 @@ class EngineConfig:
     # Smallest jit bucket for the packed q length (lengths round up to the
     # next power of two so steady-state serving stops recompiling).
     pack_bucket_min: int = 16
+    # Paged batched decode: all active slots decode in ONE launch that
+    # gathers each slot's live kv_block-token blocks from a shared block
+    # pool (kernels/paged_decode.py) instead of streaming a dense per-slot
+    # cache padded to max_len; the step is priced on the live blocks
+    # (PerfModel.t_decode_paged).  Packed-prefill outputs land directly in
+    # the pool (segments are kv_block-aligned, so spans ARE whole blocks);
+    # batch-mates that loaded the same stored context share its full prefix
+    # blocks (refcounted, copy-on-write on append).  Requires a packable
+    # arch; others silently keep the dense path.  Tokens are bit-identical
+    # to dense decode either way (tests/test_paged_decode.py).
+    paged_decode: bool = False
+    # Pool block size in tokens; must equal pack_align so packed-prefill kv
+    # spans land block-aligned in the pool.
+    kv_block: int = 128
 
 
 @dataclasses.dataclass
@@ -205,7 +219,6 @@ class ServingEngine:
         self._prefetch_lookup: Dict[int, tuple] = {}
         self._next_migration_s = self.ec.migration_interval_s
 
-        self._state = self.api.init_state(cfg, self.ec.max_slots, self.ec.max_len)
         self._jit_prefill = jax.jit(self._prefill_impl)
         self._jit_decode = jax.jit(self._decode_impl)
         self._jit_packed = (
@@ -217,6 +230,36 @@ class ServingEngine:
             self.api.prefill_packed is not None
             and paged.packable_arch(cfg, self.ec.max_len)
         )
+        # Paged batched decode over the shared KV block pool (packable archs
+        # only — the paged layout needs per-position attention state and the
+        # block-aligned packed-prefill spans to land admissions in place).
+        self._paged_on = (
+            self.ec.paged_decode
+            and self._packable
+            and self.api.decode_paged is not None
+        )
+        self._paged: Optional[paged.PagedSlots] = None
+        if self._paged_on:
+            assert self.ec.kv_block == self.ec.pack_align, (
+                "packed spans must land block-aligned in the pool",
+                self.ec.kv_block, self.ec.pack_align,
+            )
+            assert self.ec.max_len % self.ec.kv_block == 0, (
+                self.ec.max_len, self.ec.kv_block)
+            self._paged = paged.PagedSlots(
+                self.ec.max_slots, self.ec.max_len, self.ec.kv_block
+            )
+            self._pool_caches = paged.init_pool_caches(
+                cfg, self._paged.pool.n_blocks, self.ec.kv_block
+            )
+            self._jit_decode_paged = jax.jit(self._decode_paged_impl)
+            # the paged path never touches the dense slotted cache: the pool
+            # IS the device KV state (no doubled HBM footprint)
+            self._state = None
+        else:
+            self._state = self.api.init_state(
+                cfg, self.ec.max_slots, self.ec.max_len
+            )
         # packed-admission observability (benchmarks assert on these)
         self.jit_stats = JitBucketStats()
         self.batches = 0
@@ -225,6 +268,8 @@ class ServingEngine:
         self.lookup_walks = 0  # real trie walks
         self.lookup_reuses = 0  # admissions served from the prefetch walk
         self.admission_busy_s = 0.0  # modeled time spent in load+prefill
+        self.decode_busy_s = 0.0  # modeled time spent in decode steps
+        self.decode_tokens = 0  # tokens emitted by decode steps
 
     # ------------------------------------------------------------------ #
     # jit'd compute
@@ -248,6 +293,14 @@ class ServingEngine:
         pos = jnp.where(active, new_state.pos, state.pos)
         new_state = new_state._replace(pos=pos)
         return logits, new_state
+
+    def _decode_paged_impl(self, params, tokens, caches, tables, pos):
+        # positions/tables are host-managed (PagedSlots); freed slots carry
+        # zeroed tables, routing their stale writes onto the dump block.
+        return self.api.decode_paged(
+            params, self.cfg, tokens, caches,
+            block_table=tables, pos=pos, block=self.ec.kv_block,
+        )
 
     # ------------------------------------------------------------------ #
     # Public API: submit / step / drain / run
@@ -440,7 +493,10 @@ class ServingEngine:
         self._release_prefetch(req.req_id)
 
         # ---- install into the batch slot ------------------------------- #
-        self._state = paged.insert_slot(self.cfg, self._state, slot.index, temp)
+        if self._paged_on:
+            self._land_state_in_pool(slot, temp)
+        else:
+            self._state = paged.insert_slot(self.cfg, self._state, slot.index, temp)
         first_tok = int(jnp.argmax(logits[0]))
 
         self.clock.advance(load_s + prefill_s)
@@ -545,11 +601,16 @@ class ServingEngine:
         self.clock.advance(batch_load + prefill_s)
         self.admission_busy_s += batch_load + prefill_s
 
+        if self._paged_on:
+            # packed outputs land DIRECTLY in the shared block pool: one
+            # scatter for the whole batch, no per-slot re-materialization.
+            self._land_packed_in_pool(admissions, layout, new_caches)
         for i, (a, seg) in enumerate(zip(admissions, layout.segments)):
-            self._state = paged.insert_slot(
-                self.cfg, self._state, seg.slot,
-                paged.packed_to_artifact(self.cfg, new_caches, seg, seg.n_total),
-            )
+            if not self._paged_on:
+                self._state = paged.insert_slot(
+                    self.cfg, self._state, seg.slot,
+                    paged.packed_to_artifact(self.cfg, new_caches, seg, seg.n_total),
+                )
             a.rec.matched_tokens = a.matched
             # every batch member waits the load BARRIER (max of the batch's
             # fetches) before the shared kernel: record the realized wait so
@@ -560,6 +621,89 @@ class ServingEngine:
                 self._c_gpu_s * prefill_s * (len(a.new_tokens) / total_new)
             )
             self._finish_admission(a, int(jnp.argmax(logits[i])), events)
+
+    # -- shared-block-pool landings (paged decode) ---------------------- #
+    def _pool_update(self, dst: np.ndarray, sources) -> None:
+        """Land KV rows at pool rows ``dst``: ``sources`` yields one
+        (k_rows, v_rows) pair per layer kind, aligned with the pool caches —
+        the single scatter shared by every landing path."""
+        self._pool_caches = tuple(
+            paged.BlockCache(
+                paged.KVCache(
+                    pc.attn.k.at[:, dst].set(ks), pc.attn.v.at[:, dst].set(vs)
+                ),
+                None,
+            )
+            for pc, (ks, vs) in zip(self._pool_caches, sources)
+        )
+
+    def _land_packed_in_pool(
+        self, admissions: List["_Admission"], layout: paged.PackLayout, new_caches
+    ) -> None:
+        """Move every segment's kv span from the packed buffers into the
+        shared block pool.  Segments are kv_block-aligned (pack_align ==
+        kv_block), so a span IS a run of whole blocks: the whole batch lands
+        as ONE device scatter per layer kind.  Batch-mates that loaded the
+        same stored entry point their table prefixes at one refcounted copy
+        of its full blocks (the write-back dedup, carried into the pool);
+        only each segment's own blocks are copied."""
+        block = self.ec.kv_block
+        src_blocks: List[int] = []
+        dst_blocks: List[int] = []
+        leaders: Dict[str, tuple] = {}  # entry_id -> (slot, matched)
+        for a, seg in zip(admissions, layout.segments):
+            shared_from, shared = None, 0
+            if a.artifact is not None and a.lookup.entry is not None:
+                led = leaders.get(a.lookup.entry.entry_id)
+                if led is not None:
+                    shared_from, led_matched = led
+                    # a block is shareable iff BOTH mates' reused prefixes
+                    # cover it fully; the boundary block stays private (the
+                    # copy-on-write line at the shared-suffix boundary)
+                    shared = min(a.matched, led_matched) // block
+                else:
+                    leaders[a.lookup.entry.entry_id] = (seg.slot, a.matched)
+            own = self._paged.admit(
+                seg.slot, seg.n_total, shared_from=shared_from,
+                shared_blocks=shared,
+            )
+            first = seg.kv_start // block
+            for j, bid in enumerate(own, start=shared):
+                src_blocks.append(first + j)
+                dst_blocks.append(bid)
+        src = paged.block_rows(src_blocks, block)
+        dst = paged.block_rows(dst_blocks, block)
+        self._pool_update(
+            dst, ((nc.attn.k[:, 0, src], nc.attn.v[:, 0, src]) for nc in new_caches)
+        )
+
+    def _land_state_in_pool(self, slot: Slot, temp) -> None:
+        """Per-request fallback admissions (embeds) under paged decode: copy
+        the freshly prefilled batch-1 state's rows into newly allocated pool
+        blocks (the single-segment analogue of ``_land_packed_in_pool``)."""
+        block = self.ec.kv_block
+        n_total = int(np.asarray(temp.pos)[0])
+        own = self._paged.admit(slot.index, n_total)
+        dst = paged.block_rows(own, block)
+        n_rows = len(own) * block  # <= max_len (max_len % kv_block == 0)
+        self._pool_update(
+            dst,
+            (
+                (tc.attn.k[:, 0, :n_rows], tc.attn.v[:, 0, :n_rows])
+                for tc in temp.caches
+            ),
+        )
+
+    def _copy_pool_blocks(self, splits: List[paged.CowSplit]) -> None:
+        """Copy-on-write: duplicate shared boundary blocks onto private ones
+        before a decode write touches them (one gather/scatter pair)."""
+        block = self.ec.kv_block
+        src = paged.block_rows([s.src for s in splits], block)
+        dst = paged.block_rows([s.dst for s in splits], block)
+        self._pool_update(
+            dst,
+            ((pc.attn.k[:, src], pc.attn.v[:, src]) for pc in self._pool_caches),
+        )
 
     def _fetch_kv(self, req: Request, plan: ReusePlan, lookup: StoreLookup):
         """Charge + execute the storage fetch of a load/partial plan; returns
@@ -791,6 +935,25 @@ class ServingEngine:
             "admission_busy_s": self.admission_busy_s,
         }
 
+    def decode_stats(self) -> Dict[str, Any]:
+        """Decode-side counters: modeled decode busy time (the denominator of
+        decode throughput), tokens decoded, and — under paged decode — block
+        pool occupancy and cross-slot shared-block savings."""
+        out: Dict[str, Any] = {
+            "paged": self._paged_on,
+            "decode_busy_s": self.decode_busy_s,
+            "decode_tokens": self.decode_tokens,
+        }
+        if self._paged_on:
+            out.update(
+                kv_block=self.ec.kv_block,
+                pool_blocks=self._paged.pool.n_blocks,
+                pool_blocks_used=self._paged.pool.n_used,
+                pool_blocks_peak=self._paged.pool_blocks_peak,
+                shared_block_hits=self._paged.shared_block_hits,
+            )
+        return out
+
     def _store_tier(self) -> str:
         if self.ec.store_tier is not None:
             return self.ec.store_tier
@@ -804,16 +967,26 @@ class ServingEngine:
         toks = np.array(
             [[s.last_token if s.active else 0] for s in self.slots], np.int32
         )
-        logits, self._state = self._jit_decode(
-            self.params, jnp.asarray(toks), self._state, jnp.asarray(active)
-        )
+        if self._paged_on:
+            logits = self._decode_paged_launch(toks)
+        else:
+            logits, self._state = self._jit_decode(
+                self.params, jnp.asarray(toks), self._state, jnp.asarray(active)
+            )
         n_active = int(active.sum())
-        ctx_len = max(
-            (s.record.context_len + s.record.prompt_len + s.generated)
+        lens = [
+            s.record.context_len + s.record.prompt_len + s.generated
             for s in self.slots
             if s.active
-        )
-        step_s = self.perf.t_decode(self.cost_cfg, 1, ctx_len, batch=n_active)
+        ]
+        if self._paged_on:
+            # live-blocks pricing: each slot is billed exactly the KV bytes
+            # its block table streams, not the longest slot's padded length.
+            step_s = self.perf.t_decode_paged(self.cost_cfg, lens)
+        else:
+            step_s = self.perf.t_decode(self.cost_cfg, 1, max(lens), batch=n_active)
+        self.decode_busy_s += step_s
+        self.decode_tokens += n_active
         self.clock.advance(step_s)
         per_req_cost = self._c_gpu_s * step_s / n_active
 
@@ -835,6 +1008,29 @@ class ServingEngine:
             s.generated += 1
             self._maybe_finish(s, events)
 
+    def _decode_paged_launch(self, toks: np.ndarray) -> jax.Array:
+        """One paged decode launch across all active slots: grow/CoW-split
+        block tables for the incoming token, run the shared-pool kernel, and
+        append in place (tables/lens are host-side; shapes are static, so
+        steady decode never recompiles)."""
+        ps = self._paged
+        splits = []
+        for s in self.slots:
+            if s.active:
+                cow = ps.prepare_append(s.index)
+                if cow is not None:
+                    splits.append(cow)
+        if splits:
+            self._copy_pool_blocks(splits)
+        logits, self._pool_caches = self._jit_decode_paged(
+            self.params, jnp.asarray(toks), self._pool_caches,
+            jnp.asarray(ps.tables), jnp.asarray(ps.lens, jnp.int32),
+        )
+        for s in self.slots:
+            if s.active:
+                ps.note_token(s.index)
+        return logits
+
     def _maybe_finish(self, s: Slot, events: List[ev.Event]) -> None:
         req = s.request
         done = s.generated >= req.max_new_tokens or (
@@ -850,3 +1046,8 @@ class ServingEngine:
             )
             s.active = False
             s.request = None
+            if self._paged_on:
+                # completion returns the slot's blocks to the shared pool
+                # (shared-prefix blocks on their LAST reference) and zeroes
+                # its table so stale writes land on the dump block.
+                self._paged.free(s.index)

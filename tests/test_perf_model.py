@@ -68,6 +68,33 @@ def test_batched_decode_amortises_weights():
     assert t32 > t1  # KV reads still scale
 
 
+def test_paged_decode_prices_live_blocks():
+    """t_decode_paged bills each slot its OWN live context: a mixed-length
+    batch is strictly cheaper than the dense padded pricing (batch * max),
+    while a uniform batch delegates to t_decode EXACTLY (the dense/paged
+    golden-parity contract) — the engine._decode_step padded-ctx_len fix."""
+    cfg = get_config("llama-7b")
+    lens = [512, 4096, 1024, 256]
+    paged = PM.t_decode_paged(cfg, lens)
+    dense = PM.t_decode(cfg, 1, max(lens), batch=len(lens))
+    assert paged < dense
+    # lower-bounded by pretending every slot were the shortest
+    assert paged > PM.t_decode(cfg, 1, min(lens), batch=len(lens))
+    # uniform batch: exact delegation, not approximate agreement
+    assert PM.t_decode_paged(cfg, [2048] * 4) == PM.t_decode(cfg, 1, 2048, batch=4)
+    assert PM.t_decode_paged(cfg, [777]) == PM.t_decode(cfg, 1, 777, batch=1)
+    assert PM.t_decode_paged(cfg, []) == 0.0
+    # monotone: growing any slot's live context never gets cheaper
+    grown = PM.t_decode_paged(cfg, [512, 8192, 1024, 256])
+    assert grown >= paged
+    # SWA archs cap each slot's live window
+    swa = get_config("mixtral-8x22b")
+    w = swa.sliding_window
+    assert PM.t_decode_paged(swa, [10 * w, w]) == pytest.approx(
+        PM.t_decode_paged(swa, [20 * w, w]), rel=1e-9
+    )
+
+
 def test_more_chips_never_slower():
     cfg = get_config("granite-34b")
     small, big = PerfModel(tpu_v5e(8)), PerfModel(tpu_v5e(256))

@@ -279,14 +279,21 @@ def _golden_scenarios(cfg, params):
     }
 
 
-def test_golden_parity_with_seed_engine():
+@pytest.mark.parametrize("decode_mode", ["dense", "paged"])
+def test_golden_parity_with_seed_engine(decode_mode):
     """The refactored plan/execute engine reproduces the seed (pre-refactor)
     engine's per-request actions and all modeled times/costs to 1e-9 on the
-    canonical serving scenarios (golden file captured from the seed code)."""
+    canonical serving scenarios (golden file captured from the seed code) —
+    replayed under BOTH decode configs: the paged block-pool decode path
+    must be indistinguishable from the dense one on the seed trace (uniform
+    batches; ``t_decode_paged``'s delegation contract)."""
     golden = json.loads(GOLDEN.read_text())
     cfg, params = _setup("llama-7b")
     for name, (reqs, kw) in _golden_scenarios(cfg, params).items():
-        eng, s, _, _ = _run(cfg, params, reqs, **kw)
+        eng, s, _, _ = _run(
+            cfg, params, reqs, paged_decode=decode_mode == "paged", **kw
+        )
+        assert eng.decode_stats()["paged"] is (decode_mode == "paged")
         want = golden[name]
         recs = sorted(eng.records, key=lambda r: r.req_id)
         assert len(recs) == len(want["records"]), name
