@@ -1,10 +1,12 @@
 """Serving throughput benchmark: burst + steady-state workloads through the
-packed batch-admission engine (vs single-request admission), plus a
-decode-bound workload through paged block-pool decode (vs dense decode).
+packed batch-admission engine (vs single-request admission), a decode-bound
+workload through paged block-pool decode (vs dense decode), and a
+shuffled-chunk RAG workload through fused non-prefix reuse (vs full
+recompute prefill).
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--requests N]
         [--steady-requests N] [--slots K] [--decode-requests N]
-        [--decode-slots K] [--out BENCH_serving.json]
+        [--decode-slots K] [--rag-requests N] [--out BENCH_serving.json]
 
 Numerics run the reduced config on CPU; times/costs are modeled at
 ``--cost-arch`` scale (paper-style V100x4 + AWS pricing), so requests/s and
@@ -18,9 +20,14 @@ TTFT are economics-model numbers, not CPU wall clock.  Emits
   * the ``decode`` workload (long generations, short prompts, ragged warm
     contexts), per-mode (paged vs dense): decode tokens/s over modeled
     decode busy time, pool block usage, shared-prefix block hits;
-  * ``speedup``: packed-over-single admission-throughput ratio per workload
-    (CI smoke asserts >= 2x on the burst) and the paged-over-dense decode
-    tokens/s ratio (CI smoke asserts >= 1.5x; tokens must be identical).
+  * the ``rag`` workload (warm store of shared document chunks, each
+    request's chunk ORDER permuted so the prefix trie misses), per-mode
+    (fused vs full): modeled admission (load+prefill) time per request,
+    fused-path counters (reused/recomputed tokens, sources, jit buckets);
+  * ``speedup``: packed-over-single admission throughput (CI asserts >= 2x
+    on the burst), paged-over-dense decode tokens/s (>= 1.5x,
+    token-identical), and full-over-fused prefill time on the rag workload
+    (CI asserts >= 2x — the CacheBlend-style selective-recompute win).
 """
 from __future__ import annotations
 
@@ -183,6 +190,106 @@ def _serve_decode(cfg, params, *, n, slots, cost_arch, paged, seed):
     return out, {r.req_id: r.tokens for r in records}
 
 
+# RAG workload shape: every context is ``RAG_CTX_CHUNKS`` document chunks of
+# ``RAG_CHUNK`` tokens drawn from a shared pool, PERMUTED per request — the
+# chain-hash trie sees (at best) a 1-chunk prefix, while the chunk-content
+# index matches everything.  Fused prefill fetches the matched chunk KV and
+# recomputes only the r-fraction + prompt; the full path recomputes it all.
+RAG_CHUNK = 32
+# long-ish contexts: full recompute prefill is compute-bound (scales with
+# ctx len) while the fused launch bottoms out at the parameter-read floor,
+# which is where the CacheBlend win lives
+RAG_CTX_CHUNKS = 8
+RAG_POOL = 16  # two DISJOINT warm contexts cover it (a fused warm admission
+# would skip write-back and leave pool chunks unstored)
+
+
+def _serve_rag(cfg, params, *, n, slots, cost_arch, fused, seed,
+               recompute_frac=0.16):
+    """Shuffled-chunk RAG workload: a warm wave stores ``RAG_POOL`` document
+    chunks (via two canonical-order contexts covering the pool), then the
+    measured burst issues requests whose chunk order is permuted per
+    request.  ``fused=True`` serves them via chunk-composite fused prefill
+    (BlendPlanner, always-fuse), ``fused=False`` via the classic
+    prefix-only engine — the comparison is modeled admission (load+prefill)
+    time per request."""
+    import jax  # noqa: F401
+
+    from repro.core.perf_model import PerfModel, V100_X4_HF
+    from repro.core.pricing import AWS_PAPER
+    from repro.serving import (
+        AlwaysReusePlanner,
+        BlendPlanner,
+        EngineConfig,
+        Request,
+        ServingEngine,
+    )
+
+    rng = np.random.default_rng(seed)
+    chunks = [
+        list(map(int, rng.integers(0, cfg.vocab, RAG_CHUNK)))
+        for _ in range(RAG_POOL)
+    ]
+    prompt_len, new = 16, 4
+
+    def req(i, order, t):
+        return dict(
+            req_id=i,
+            context_tokens=sum((chunks[j] for j in order), []),
+            prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, prompt_len))),
+            max_new_tokens=new, arrival_s=t, expected_reuses=max(n // 2, 1),
+        )
+
+    warm = [req(0, list(range(RAG_CTX_CHUNKS)), 0.0),
+            req(1, list(range(RAG_CTX_CHUNKS, RAG_POOL)), 20.0)]
+    orders = [
+        list(rng.permutation(RAG_POOL)[:RAG_CTX_CHUNKS]) for _ in range(n)
+    ]
+    reqs = [req(100 + i, o, 0.0) for i, o in enumerate(orders)]
+
+    max_len = -(-(RAG_CTX_CHUNKS * RAG_CHUNK + prompt_len + new) // 128) * 128
+    ec = EngineConfig(
+        max_slots=slots, max_len=max_len, chunk_tokens=RAG_CHUNK,
+        cost_arch=cost_arch, fusion_enabled=fused,
+        store_tier="host_dram",  # warm RAG chunk KV is a hot working set
+    )
+    planner = (
+        BlendPlanner(recompute_frac=recompute_frac, always=True)
+        if fused else AlwaysReusePlanner()
+    )
+    eng = ServingEngine(
+        cfg, params, engine_cfg=ec, planner=planner,
+        pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF),
+    )
+    for r in warm:
+        eng.submit(Request(**r))
+    eng.run()
+    t0 = eng.clock.now
+    n_warm = len(eng.records)
+    busy0 = eng.admission_busy_s
+    for r in reqs:
+        eng.submit(Request(**{**r, "arrival_s": r["arrival_s"] + t0}))
+    eng.run()
+    records = eng.records[n_warm:]
+    busy = eng.admission_busy_s - busy0
+    fs = eng.fused_stats()
+    out = {
+        "n_requests": len(records),
+        "admission_busy_s": busy,
+        "admission_s_per_request": busy / max(len(records), 1),
+        "mean_ttft_s": float(np.mean([r.ttft_s for r in records])),
+        "reuse_hits": sum(
+            1 for r in records if r.action in ("load", "partial", "fused")
+        ),
+        "fused_admissions": fs["admissions"],
+        "fused_reused_tokens": fs["reused_tokens"],
+        "fused_recompute_tokens": fs["recompute_tokens"],
+        "fused_sources": fs["sources"],
+        "fused_jit_misses": fs["jit"]["misses"],
+    }
+    return out
+
+
 def run(
     n_burst: int = 24,
     n_steady: int = 24,
@@ -192,6 +299,7 @@ def run(
     seed: int = 0,
     n_decode: int = 32,
     decode_slots: int = 32,
+    n_rag: int = 16,
 ) -> Dict:
     import jax
 
@@ -261,12 +369,24 @@ def run(
     results["speedup"]["decode_tokens_per_s"] = (
         paged_d["decode_tokens_per_s"] / max(dense_d["decode_tokens_per_s"], 1e-12)
     )
+    # shuffled-chunk RAG phase: fused non-prefix reuse vs full recompute
+    rag_f = _serve_rag(cfg, params, n=n_rag, slots=slots,
+                       cost_arch=cost_arch, fused=True, seed=seed)
+    rag_full = _serve_rag(cfg, params, n=n_rag, slots=slots,
+                          cost_arch=cost_arch, fused=False, seed=seed)
+    results["workloads"]["rag"] = {"fused": rag_f, "full": rag_full}
+    results["speedup"]["rag_prefill"] = (
+        rag_full["admission_s_per_request"]
+        / max(rag_f["admission_s_per_request"], 1e-12)
+    )
 
     results["config"] = {
         "arch": arch, "cost_arch": cost_arch, "slots": slots,
         "n_burst": n_burst, "n_steady": n_steady,
         "n_decode": n_decode, "decode_slots": decode_slots,
         "decode_ctx_lens": DECODE_CTX_LENS,
+        "n_rag": n_rag, "rag_chunk": RAG_CHUNK,
+        "rag_ctx_chunks": RAG_CTX_CHUNKS, "rag_pool": RAG_POOL,
     }
     return results
 
@@ -279,6 +399,8 @@ def main() -> List[str]:
     ap.add_argument("--decode-requests", type=int, default=32,
                     help="decode-bound workload size")
     ap.add_argument("--decode-slots", type=int, default=32)
+    ap.add_argument("--rag-requests", type=int, default=16,
+                    help="shuffled-chunk RAG workload size")
     ap.add_argument("--arch", default="llama-7b")
     ap.add_argument("--cost-arch", default="llama-7b")
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -288,12 +410,13 @@ def main() -> List[str]:
         n_burst=args.requests, n_steady=args.steady_requests,
         slots=args.slots, arch=args.arch, cost_arch=args.cost_arch,
         n_decode=args.decode_requests, decode_slots=args.decode_slots,
+        n_rag=args.rag_requests,
     )
     pathlib.Path(args.out).write_text(json.dumps(res, indent=2))
 
     lines = []
     for name, modes in res["workloads"].items():
-        if name == "decode":
+        if name in ("decode", "rag"):
             continue
         p, s = modes["packed"], modes["single"]
         lines.append(
@@ -309,6 +432,15 @@ def main() -> List[str]:
         f"(shared blocks {d['paged']['shared_block_hits']}) "
         f"vs dense {d['dense']['decode_tokens_per_s']:.1f} tok/s "
         f"-> {res['speedup']['decode_tokens_per_s']:.2f}x"
+    )
+    g = res["workloads"]["rag"]
+    lines.append(
+        f"rag: fused {g['fused']['admission_s_per_request']*1e3:.1f} ms/req "
+        f"admission ({g['fused']['fused_admissions']} fused, "
+        f"{g['fused']['fused_reused_tokens']} reused / "
+        f"{g['fused']['fused_recompute_tokens']} recomputed tokens) "
+        f"vs full {g['full']['admission_s_per_request']*1e3:.1f} ms/req "
+        f"-> {res['speedup']['rag_prefill']:.2f}x"
     )
     for ln in lines:
         print(ln)
@@ -327,6 +459,10 @@ def main() -> List[str]:
     # decode-bound workload (live-blocks HBM pricing vs padded batch * max)
     dec = res["speedup"]["decode_tokens_per_s"]
     assert dec >= 1.5, f"paged decode speedup {dec:.2f}x < 1.5x"
+    # fused non-prefix reuse must beat full recompute >= 2x on the
+    # shuffled-chunk RAG workload (selective recompute of the r-fraction)
+    rag = res["speedup"]["rag_prefill"]
+    assert rag >= 2.0, f"fused RAG prefill speedup {rag:.2f}x < 2x"
     print(f"wrote {args.out}")
     return lines
 

@@ -14,8 +14,11 @@ contexts) through the continuous-batching engine in four policies:
 Real compute (reduced llama on CPU), paper-scale economics
 (EngineConfig.cost_arch="llama-7b", V100/HF-MP perf model, AWS pricing).
 Ends with the per-request SLO audit of the hierarchy run (serving/audit.py).
+``--trace PATH`` exports every policy's typed event stream as JSONL (one
+line per event, tagged with its ``mode``; serving/trace.py).
 
-    PYTHONPATH=src python examples/serve_reuse.py [--requests 24] [--arch llama-7b]
+    PYTHONPATH=src python examples/serve_reuse.py [--requests 24]
+        [--arch llama-7b] [--trace events.jsonl]
 """
 import argparse
 
@@ -29,6 +32,7 @@ from repro.kvcache.hierarchy import TierSpec
 from repro.models import registry
 from repro.serving import CostAwarePlanner, EngineConfig, Request, ServingEngine
 from repro.serving import audit as audit_mod
+from repro.serving import trace as trace_mod
 from repro.serving.scheduler import HedgePolicy
 
 MODES = ("recompute", "paper", "beyond", "hierarchy")
@@ -73,6 +77,8 @@ def main():
     ap.add_argument("--arch", default="llama-7b", help="economics arch (full size)")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--contexts", type=int, default=6)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export every mode's typed event stream as JSONL")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
@@ -92,12 +98,17 @@ def main():
     print(f"{'policy':10s} {'hits':>5s} {'cost $':>9s} {'TTFT s':>8s} "
           f"{'p99 e2e s':>10s} {'storage %':>10s}")
     results = {}
+    tracer = trace_mod.TraceWriter(args.trace) if args.trace else None
     for mode in MODES:
         eng = build_engine(cfg, params, mode, args.arch)
         requests = [Request(**r.__dict__) for r in reqs]
         for r in requests:
             eng.submit(r)
-        events = list(eng.drain())
+        events = []
+        for e in eng.drain():  # live export: each event lands as it happens
+            events.append(e)
+            if tracer is not None:
+                tracer.write(e, mode=mode)
         s = eng.summary()
         results[mode] = (s, {rec.req_id: rec.tokens for rec in eng.records},
                          events, requests)
@@ -111,6 +122,10 @@ def main():
         print(f"\n{mode}: {base.total_cost/s.total_cost:.2f}x cheaper, "
               f"{base.mean_ttft_s/s.mean_ttft_s:.2f}x faster TTFT vs recompute; "
               f"tokens identical: {results[mode][1] == results['recompute'][1]}")
+
+    if tracer is not None:
+        tracer.close()
+        print(f"\nwrote {tracer.n_events} events to {tracer.path}")
 
     # fold the hierarchy run's event stream into the per-request SLO audit
     _, _, events, requests = results["hierarchy"]

@@ -123,6 +123,33 @@ def packed_attention(
     )
 
 
+def fused_prefill(
+    q: jax.Array,  # [B, Sq, H, hd] — selectively-recomputed tokens only
+    k: jax.Array,  # [B, Skv, KV, hd] — assembled context buffer
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,  # [B, Sq] absolute (gappy) query positions
+    kv_pos: jax.Array,  # [B, Skv] row positions (-1 invalid)
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Selective-recompute attention over an assembled KV buffer — the
+    CacheBlend-style fused prefill of non-prefix chunk reuse.  See
+    ``ref.fused_prefill_ref`` for semantics and the r=1.0 bit-exactness
+    contract vs plain full prefill."""
+    use_pallas, interpret = _use_pallas()
+    if use_pallas and q.shape[1] >= 128:
+        from repro.kernels import fused_prefill as fpk
+
+        if fpk.supported(q, k, v, window=window):
+            return fpk.fused_flash_attention(
+                q, k, v, q_pos=q_pos, kv_pos=kv_pos, window=window,
+                interpret=interpret,
+            )
+    return ref.fused_prefill_ref(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, window=window
+    )
+
+
 def decode_attention(
     q: jax.Array,  # [B, 1, H, hd]
     k: jax.Array,  # [B, L, KV, hd]

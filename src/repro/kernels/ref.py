@@ -150,6 +150,50 @@ def packed_attention_ref(
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+def fused_prefill_ref(
+    q: jax.Array,  # [B, Sq, H, hd] — the selectively-recomputed tokens only
+    k: jax.Array,  # [B, Skv, KV, hd] — the ASSEMBLED context buffer
+    v: jax.Array,  # [B, Skv, KV, hd]
+    *,
+    q_pos: jax.Array,  # [B, Sq] absolute positions of the recompute tokens
+    kv_pos: jax.Array,  # [B, Skv] row positions (-1 = invalid/padding row)
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Selective-recompute fused prefill attention (CacheBlend-style).
+
+    ``k``/``v`` hold one query-ordered KV buffer assembled from reused
+    chunk spans (preloaded from storage) plus the recompute tokens' fresh
+    K/V (scattered in by the caller at their ``q_pos`` rows).  The queries
+    are only the recompute tokens — a *gappy* subset of positions, unlike
+    suffix prefill — and each attends causally over the FULL assembled
+    buffer at its absolute position.  Masking rule for query position p and
+    kv row position s: keep iff ``s >= 0 and s <= p`` (and the window).
+    With every position recomputed (r=1.0) this is exactly full-prefill
+    attention — the bit-exactness anchor of ``tests/test_fusion.py``.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+
+    qp = q_pos[:, None, None, :, None].astype(jnp.int32)  # [B,1,1,Sq,1]
+    sp = kv_pos[:, None, None, None, :].astype(jnp.int32)  # [B,1,1,1,Skv]
+    mask = (sp >= 0) & (sp <= qp)
+    if window is not None:
+        mask &= sp > qp - window
+
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = jnp.where(mask, w, 0.0)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    w = w / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
 def paged_decode_ref(
     q: jax.Array,  # [B, 1, H, hd] — one query token per sequence
     k_pool: jax.Array,  # [N_rows, KV, hd] — the SHARED block pool, flat rows

@@ -57,6 +57,7 @@ from repro.kvcache.backend import (
     _MemoryBackend,
 )
 from repro.kvcache.chunks import ChunkTrie, PrefixMatch
+from repro.kvcache.fusion import ChunkIndex, CompositeMatch
 from repro.kvcache.transfer import SimClock, TransferModel
 
 # Storage rate assumed by eviction/migration scoring when no Pricing is
@@ -311,6 +312,12 @@ class StoredEntry:
     # pin count: >0 means an in-flight prefetch or planned fetch depends on
     # this entry — it must not be evicted, demoted, or promoted.
     pins: int = 0
+    # monotone store-assigned sequence number (deterministic tie-break for
+    # the migration pass's move ordering).
+    seq: int = 0
+    # position-independent content hashes of the entry's complete chunks —
+    # its footprint in the fusion ChunkIndex, removed on eviction.
+    content_chunks: List[str] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -441,6 +448,10 @@ class TieredStore:
         assert not missing, f"tiers without a backend: {sorted(missing)}"
         self.pricing = pricing
         self.trie = ChunkTrie(chunk_tokens)
+        # position-independent per-chunk content index maintained alongside
+        # the chain-hash trie — the fusion subsystem's non-prefix match
+        # surface (kvcache/fusion.py; consulted via lookup_composite).
+        self.chunk_index = ChunkIndex(chunk_tokens)
         self.entries: Dict[str, StoredEntry] = {}
         self.compress_tier = compress_tier
         self.eviction = eviction
@@ -454,11 +465,20 @@ class TieredStore:
         # lookup result (e.g. the engine's prefetch pass) revalidate with it
         # instead of re-walking the trie at admission.
         self.trie_version = 0
-        # banded-migration memo: entry_id -> (band key, last target).  An
-        # entry whose reuse-frequency band, tier, size, and pricing env are
-        # all unchanged since it last evaluated to "stay put" is skipped by
-        # run_migrations — the ROADMAP O(entries x tiers) fix.
-        self._mig_cache: Dict[str, Tuple[tuple, Optional[str]]] = {}
+        # Migration priority queue: (due_s, seq, entry_id) min-heap keyed by
+        # each entry's predicted band-crossing time — reuse frequency
+        # uses/age decays monotonically between touches, so the instant its
+        # log2 band drops an edge is closed-form.  run_migrations pops only
+        # the DUE entries (plus the event-dirtied ones: fetched, moved,
+        # unpinned, repriced) instead of walking O(entries) per tick.
+        # Lazy deletion: an entry's ARMED wake-up is the due time in
+        # _mig_next; heap items that disagree (superseded by a re-arm) or
+        # whose entry died are skipped at pop, so each entry holds at most
+        # one live wake-up no matter how often it re-evaluates.
+        self._mig_heap: List[Tuple[float, int, str]] = []
+        self._mig_next: Dict[str, float] = {}
+        self._mig_dirty: set = set()
+        self._mig_seq = itertools.count()
         self._mig_env: Optional[tuple] = None
         self.migration_evals = 0
         self.migration_skips = 0
@@ -504,6 +524,9 @@ class TieredStore:
         if e is None:
             return False
         e.pins = max(0, e.pins - 1)
+        if e.pins == 0 and self.migration is not None:
+            # the pin suppressed migration: force a fresh look next pass
+            self._mig_dirty.add(entry_id)
         return True
 
     def pinned(self, entry_id: str) -> bool:
@@ -538,11 +561,13 @@ class TieredStore:
             self.rejected_puts += 1
             return None, 0.0
 
-        entry_id = f"ctx{next(self._ids)}"
+        n = next(self._ids)
+        entry_id = f"ctx{n}"
         chain = self.trie.insert(tokens, entry_id)
         if not chain:  # context shorter than one chunk: not storable
             self.rejected_puts += 1
             return None, 0.0
+        content = self.chunk_index.insert(tokens, entry_id)
         e = StoredEntry(
             entry_id=entry_id,
             chain=chain,
@@ -553,10 +578,14 @@ class TieredStore:
             created_s=self.clock.now,
             last_used_s=self.clock.now,
             saved_per_use=saved_per_use,
+            seq=n,
+            content_chunks=content,
         )
         self.entries[entry_id] = e
         ts.used_bytes += nbytes
         self.trie_version += 1
+        if self.migration is not None:
+            self._mig_dirty.add(entry_id)
         handle = self.backends[tier].put(entry_id, artifact, nbytes)
         return entry_id, (handle.delay_s if sync else 0.0)
 
@@ -566,6 +595,12 @@ class TieredStore:
     def lookup(self, tokens: Sequence[int]) -> Tuple[PrefixMatch, Optional[StoredEntry]]:
         m = self.trie.longest_prefix(tokens)
         return m, (self.entries.get(m.entry_id) if m.entry_id else None)
+
+    def lookup_composite(self, tokens: Sequence[int]) -> CompositeMatch:
+        """Position-independent chunk-content matches for ``tokens`` — the
+        fusion planner's non-prefix reuse surface (reused spans name their
+        source entries; rows are fetched per entry at execute time)."""
+        return self.chunk_index.match(tokens)
 
     def fetch(
         self, entry_id: str, *, fraction: float = 1.0, nbytes: Optional[float] = None
@@ -579,6 +614,10 @@ class TieredStore:
         e = self.entries[entry_id]
         e.uses += 1
         e.last_used_s = self.clock.now
+        if self.migration is not None:
+            # reuse frequency just jumped: the entry's band may have crossed
+            # upward, which no time-based schedule can predict
+            self._mig_dirty.add(entry_id)
         if nbytes is None:
             nbytes = e.nbytes * max(0.0, min(1.0, fraction))
         payload, handle = self.backends[e.tier].get(entry_id, nbytes=nbytes)
@@ -642,7 +681,7 @@ class TieredStore:
         e.tier, e.nbytes, e.compressed = to_tier, new_nbytes, new_compressed
         dst.used_bytes += new_nbytes
         self.backends[to_tier].put(entry_id, new_payload, new_nbytes, charge=False)
-        self._mig_cache.pop(entry_id, None)  # tier changed: re-evaluate fresh
+        self._mig_dirty.add(entry_id)  # tier changed: re-evaluate fresh
         mig = TierMigration(
             t_s=self.clock.now, entry_id=entry_id, from_tier=from_tier,
             to_tier=to_tier, nbytes=new_nbytes, reason=reason,
@@ -656,65 +695,101 @@ class TieredStore:
     def promote(self, entry_id: str, to_tier: str) -> bool:
         return self._move(entry_id, to_tier, reason="promote") is not None
 
-    def _migration_band_key(self, e: StoredEntry) -> tuple:
-        """Everything the break-even decision depends on, discretized: the
-        entry's reuse-frequency *band* (log2 bucket — the decision thresholds
-        are crossings of lines linear in freq, so a decision flip requires a
-        freq change that soon crosses a band edge), its residency gate, tier,
-        and size.  Within a band the decision is cached; drift inside one
-        band can defer a move by at most one band (< 2x freq change)."""
+    def _mig_schedule(self, e: StoredEntry) -> None:
+        """Re-arm an entry's next migration wake-up after it evaluated to
+        "stay put".  The break-even decision depends on the entry's
+        reuse-frequency *band* (log2 bucket of uses/age): between touches the
+        frequency decays monotonically, so the instant it falls across its
+        band's lower edge is closed-form —
+
+            uses / age_h == 2^band   =>   t = created + 3600 * uses / 2^band
+
+        — and that (or the min-residency gate expiring, if sooner) is the
+        next time the decision can flip without an event.  Event-driven
+        flips (fetch, tier move, unpin, repricing) mark the entry dirty
+        instead.  Entries never fetched have no band to decay: no wake-up."""
+        due = math.inf
         now = self.clock.now
-        age_h = max((now - e.created_s) / 3600.0, 1e-9)
-        freq = e.uses / age_h
-        band = None if freq <= 0 else int(math.floor(math.log2(freq)))
-        young = (
-            self.migration.min_residency_s > 0
-            and now - e.created_s < self.migration.min_residency_s
-        )
-        return (band, young, e.tier, e.nbytes, e.compressed)
+        if e.uses > 0:
+            age_h = max((now - e.created_s) / 3600.0, 1e-9)
+            band = math.floor(math.log2(e.uses / age_h))
+            due = e.created_s + 3600.0 * e.uses / (2.0 ** band)
+            due = due * (1 + 1e-12) + 1e-9  # strictly past the edge
+        mig = self.migration
+        if mig.min_residency_s > 0 and now - e.created_s < mig.min_residency_s:
+            due = min(due, e.created_s + mig.min_residency_s)
+        if math.isfinite(due):
+            self._mig_next[e.entry_id] = due
+            heapq.heappush(self._mig_heap, (due, next(self._mig_seq), e.entry_id))
 
     def run_migrations(self, full_scan: bool = False) -> List[TierMigration]:
-        """Clock-driven migration pass: apply the bound policy to every
-        unpinned entry whose situation may have changed.  Entries are indexed
-        by reuse-frequency band (``_migration_band_key``): one that last
-        evaluated to "stay put" under the same band/tier/size/pricing is
-        skipped, so a steady store costs O(entries) bookkeeping instead of
-        O(entries x tiers) rate evaluations per tick (``migration_evals`` /
-        ``migration_skips`` expose the split; ``full_scan=True`` forces the
-        old exhaustive behavior).  Demotions run first (freeing hot-tier
-        capacity for the promotions), then promotions."""
+        """Clock-driven migration pass, driven by the band-crossing priority
+        queue: pop every entry whose predicted band-crossing time is due,
+        union the event-dirtied ones (fetched / moved / unpinned / repriced
+        since the last pass), and apply the bound policy to just those — a
+        steady store pays O(due) instead of even an O(entries) walk per tick
+        (``migration_evals`` / ``migration_skips`` expose the split;
+        ``full_scan=True`` forces the exhaustive evaluation).  Evaluating to
+        "stay put" re-arms the entry's next crossing (``_mig_schedule``);
+        a blocked move (pinned race, full destination) retries next pass.
+        Demotions apply first (freeing hot-tier capacity for promotions),
+        deepest first, ties in store insertion order — deterministically
+        identical to the exhaustive scan (regression-tested)."""
         if self.migration is None:
             return []
         self._accrue()
+        now = self.clock.now
         env = (
             tuple(self.tier_order),
             tuple(self._gb_hour_rate(t) for t in self.tier_order),
         )
         if env != self._mig_env:  # tier pricing/topology changed: all stale
-            self._mig_cache.clear()
             self._mig_env = env
+            self._mig_dirty.update(self.entries)
+        if full_scan:
+            self._mig_heap.clear()
+            self._mig_next.clear()
+            self._mig_dirty.clear()
+            due = set(self.entries)
+        else:
+            due = set(self._mig_dirty)
+            self._mig_dirty.clear()
+            while self._mig_heap and self._mig_heap[0][0] <= now:
+                due_t, _, eid = heapq.heappop(self._mig_heap)
+                if self._mig_next.get(eid) == due_t:
+                    due.add(eid)
+                # else: superseded by a later re-arm, or the entry died
         moves: List[Tuple[StoredEntry, str]] = []
-        for e in list(self.entries.values()):
+        repush: List[str] = []
+        evaluated = 0
+        for eid in sorted(due, key=lambda i: self.entries[i].seq if i in self.entries else -1):
+            self._mig_next.pop(eid, None)  # consumed / about to re-arm
+            e = self.entries.get(eid)
+            if e is None:
+                continue  # evicted since it was scheduled (lazy deletion)
             if e.pins > 0:
-                # pinned entries were not evaluated: force a fresh look when
-                # the pin drops instead of trusting a stale "stay put"
-                self._mig_cache.pop(e.entry_id, None)
-                continue
-            key = self._migration_band_key(e)
-            cached = self._mig_cache.get(e.entry_id)
-            if not full_scan and cached is not None and cached == (key, None):
-                self.migration_skips += 1
+                repush.append(eid)  # retry once the pin drops
                 continue
             tgt = self.migration.target(self, e)
-            self.migration_evals += 1
-            self._mig_cache[e.entry_id] = (key, tgt)
-            if tgt is not None:
+            evaluated += 1
+            if tgt is None:
+                self._mig_schedule(e)
+            else:
                 moves.append((e, tgt))
+        self.migration_evals += evaluated
+        if not full_scan:
+            self.migration_skips += max(
+                0, len(self.entries) - evaluated - len(repush)
+            )
+        for eid in repush:
+            self._mig_next[eid] = now
+            heapq.heappush(self._mig_heap, (now, next(self._mig_seq), eid))
         done: List[TierMigration] = []
-        # sort by direction: deepest demotions first, promotions last
+        # deepest demotions first, promotions last, ties by insertion order
         moves.sort(
-            key=lambda m: self._tier_index(m[1]) - self._tier_index(m[0].tier),
-            reverse=True,
+            key=lambda m: (
+                self._tier_index(m[0].tier) - self._tier_index(m[1]), m[0].seq
+            )
         )
         for e, tgt in moves:
             reason = (
@@ -724,6 +799,12 @@ class TieredStore:
             mig = self._move(e.entry_id, tgt, reason=reason)
             if mig is not None:
                 done.append(mig)
+            elif e.entry_id in self.entries:
+                # blocked (pinned race / full destination): retry next pass
+                self._mig_next[e.entry_id] = now
+                heapq.heappush(
+                    self._mig_heap, (now, next(self._mig_seq), e.entry_id)
+                )
         return done
 
     def drain_migrations(self) -> List[TierMigration]:
@@ -787,10 +868,12 @@ class TieredStore:
         if victim is None:
             return False
         self.trie.remove(victim.chain, victim.entry_id)
+        self.chunk_index.remove(victim.content_chunks, victim.entry_id)
         self.tiers[tier].used_bytes -= victim.nbytes
         self.backends[tier].delete(victim.entry_id)
         del self.entries[victim.entry_id]
-        self._mig_cache.pop(victim.entry_id, None)
+        self._mig_dirty.discard(victim.entry_id)  # heap ids die lazily at pop
+        self._mig_next.pop(victim.entry_id, None)
         self.trie_version += 1
         self.evictions += 1
         return True
@@ -805,6 +888,8 @@ class TieredStore:
             "migrations": len(self.migration_log),
             "migration_evals": self.migration_evals,
             "migration_skips": self.migration_skips,
+            "migration_queue": len(self._mig_next),  # armed wake-ups
+            "content_chunks": len(self.chunk_index),
             "tiers": {
                 n: {"used_gb": t.used_bytes / GB, "gb_hours": t.gb_hours}
                 for n, t in self.tiers.items()

@@ -198,6 +198,45 @@ def prefill_packed(
 
 
 # --------------------------------------------------------------------------- #
+# Fused selective-recompute prefill (CacheBlend-style non-prefix reuse)
+# --------------------------------------------------------------------------- #
+def prefill_fused(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # [1, Sq, D] — ONLY the tokens chosen for recompute
+    cache: KVCache,  # [1, Skv, KV, hd] assembled buffer, reused spans preloaded
+    *,
+    q_pos: jax.Array,  # [1, Sq] absolute positions of the recompute tokens
+    q_rows: jax.Array,  # [1, Sq] buffer row each token's fresh KV lands in
+    kv_pos: jax.Array,  # [1, Skv] row positions (-1 = invalid/padding)
+) -> Tuple[jax.Array, KVCache]:
+    """Selective-recompute prefill of one request over an assembled buffer.
+
+    ``cache`` holds the context KV in query order, with reused chunk spans
+    preloaded from storage (``kvcache.fusion.build_fused_caches``) and zeros
+    at the recompute rows.  The recompute tokens — a gappy subset of
+    positions, not a suffix — get fresh K/V scattered into their rows
+    (padding tokens carry an out-of-range row and land on a dropped scratch
+    row), then attend causally over the FULL buffer at their absolute
+    positions (``ops.fused_prefill``).  At r=1.0 every row is overwritten
+    and this is exactly ``prefill`` of the whole sequence.
+    """
+    q, k_new, v_new = _qkv(p, cfg, x)
+    if cfg.rope_theta is not None:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, q_pos, cfg.rope_theta)
+    cache = KVCache(
+        _scatter_rows_padded(cache.k, q_rows, k_new),
+        _scatter_rows_padded(cache.v, q_rows, v_new),
+    )
+    o = ops.fused_prefill(
+        q, cache.k, cache.v, q_pos=q_pos, kv_pos=kv_pos,
+        window=cfg.sliding_window,
+    )
+    return _out(p, o), cache
+
+
+# --------------------------------------------------------------------------- #
 # Decode (one token)
 # --------------------------------------------------------------------------- #
 def decode(

@@ -152,6 +152,30 @@ def prefill_packed(
     return x, BlockCache(kv, None), aux
 
 
+def prefill_fused(
+    p: Params,
+    cfg: ArchConfig,
+    kind: BlockKind,
+    x: jax.Array,  # [1, Sq, D] — recompute tokens only
+    cache: BlockCache,  # assembled attention KV buffer (mixer must be "a")
+    *,
+    q_pos: jax.Array,
+    q_rows: jax.Array,
+    kv_pos: jax.Array,
+) -> Tuple[jax.Array, BlockCache, jax.Array]:
+    """Selective-recompute fused prefill of one block — attention mixers
+    only (SSM state mixes along the sequence, so chunk-composite reuse
+    cannot skip tokens there)."""
+    assert kind.mixer == "a", "fused prefill requires an attention mixer"
+    h = layers.apply_norm(p["norm1"], cfg, x)
+    out, kv = attention.prefill_fused(
+        p["attn"], cfg, h, cache.attn, q_pos=q_pos, q_rows=q_rows, kv_pos=kv_pos
+    )
+    x = x + out
+    x, aux = _apply_ffn(p, cfg, kind, x)
+    return x, BlockCache(kv, None), aux
+
+
 def decode_paged(
     p: Params,
     cfg: ArchConfig,

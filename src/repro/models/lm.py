@@ -211,6 +211,60 @@ def prefill_packed(
 
 
 # --------------------------------------------------------------------------- #
+# Fused selective-recompute prefill (non-prefix chunk reuse) — attention only
+# --------------------------------------------------------------------------- #
+def prefill_fused(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,  # [1, Sq] the recompute tokens, in position order
+    caches: Tuple[blocks.BlockCache, ...],  # assembled buffers (fusion.build_fused_caches)
+    *,
+    q_pos: jax.Array,  # [1, Sq] absolute positions (gappy; padding -2^30)
+    q_rows: jax.Array,  # [1, Sq] buffer row per token (padding -> scratch)
+    kv_pos: jax.Array,  # [1, Skv] row positions (-1 invalid)
+    last_idx: jax.Array,  # [1] q index of the final (prompt) token
+) -> Tuple[jax.Array, Tuple[blocks.BlockCache, ...]]:
+    """Selective-recompute prefill over a chunk-composite KV assembly.
+
+    The CacheBlend-style execute path: reused chunk spans sit preloaded in
+    ``caches`` and only the selected r-fraction of tokens (plus every prompt
+    token) flows through the layer stack, each attending the full assembled
+    buffer at its absolute position.  Everything outside attention is
+    positionwise, so the gappy token subset is transparent to norms/MLP/MoE;
+    attention semantics live in ``attention.prefill_fused``.  Returns the
+    last-token logits ``[1, V]`` and the updated buffers, from which the
+    caller slices the full context+prompt state (rows ``[0, total)``) for
+    slot installation or pool landing.  At ``recompute_frac=1.0`` the token
+    set is the whole sequence and the result is bit-identical to ``prefill``
+    (tests/test_fusion.py).
+    """
+    kinds, _ = _layout(cfg)
+    assert all(k.mixer == "a" for k in kinds), (
+        "fused prefill requires attention-only stacks", cfg.name)
+    x = _embed_inputs(params, cfg, tokens, None)
+
+    def period_fn(x, per):
+        layer_params, caches_ = per
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            x, c, _ = blocks.prefill_fused(
+                layer_params[i], cfg, kind, x, caches_[i],
+                q_pos=q_pos, q_rows=q_rows, kv_pos=kv_pos,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        _remat(cfg, period_fn), x, (tuple(params["layers"]), caches),
+        unroll=cfg.scan_unroll,
+    )
+    x = jnp.take_along_axis(x, last_idx.astype(jnp.int32)[None, :, None], axis=1)
+    x = layers.apply_norm(params["final_norm"], cfg, x)
+    logits = layers.lm_logits(params["embed"], cfg, x)[0]  # [1, V]
+    return logits, new_caches
+
+
+# --------------------------------------------------------------------------- #
 # Decode (one token per sequence)
 # --------------------------------------------------------------------------- #
 def decode(

@@ -27,6 +27,11 @@ class ModelApi(NamedTuple):
       -> (logits, caches) — batched decode over the shared KV block pool
       (kvcache/paged.py); None for families that cannot page (enc-dec;
       SSM/hybrid stacks assert inside lm.decode_paged).
+    * prefill_fused(params, cfg, tokens, caches, q_pos=, q_rows=, kv_pos=,
+      last_idx=) -> (logits, caches) — selective-recompute prefill over a
+      chunk-composite KV assembly (kvcache/fusion.py, CacheBlend-style
+      non-prefix reuse); None for families that cannot fuse (enc-dec;
+      SSM/hybrid stacks assert inside lm.prefill_fused).
     """
 
     init: Callable[..., Any]
@@ -36,6 +41,7 @@ class ModelApi(NamedTuple):
     decode: Callable[..., Any]
     prefill_packed: Optional[Callable[..., Any]] = None
     decode_paged: Optional[Callable[..., Any]] = None
+    prefill_fused: Optional[Callable[..., Any]] = None
 
 
 def get_model(cfg: ArchConfig) -> ModelApi:
@@ -55,6 +61,7 @@ def get_model(cfg: ArchConfig) -> ModelApi:
         decode=lm.decode,
         prefill_packed=lm.prefill_packed,
         decode_paged=lm.decode_paged,
+        prefill_fused=lm.prefill_fused,
     )
 
 

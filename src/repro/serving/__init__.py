@@ -3,6 +3,7 @@ from repro.serving import audit  # noqa: F401
 from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
 from repro.serving.planner import (  # noqa: F401
     AlwaysReusePlanner,
+    BlendPlanner,
     CostAwarePlanner,
     ReusePlan,
     ReusePlanner,

@@ -43,7 +43,7 @@ from repro.configs.base import ArchConfig
 from repro.core.cost_model import Workload, s_storage_bytes
 from repro.core.perf_model import PerfModel, tpu_v5e
 from repro.core.pricing import Pricing, tpu_v5e_pod
-from repro.kvcache import paged
+from repro.kvcache import fusion, paged
 from repro.kvcache.backend import StorageBackend
 from repro.kvcache.hierarchy import (
     BreakEvenMigrator,
@@ -128,6 +128,15 @@ class EngineConfig:
     # Pool block size in tokens; must equal pack_align so packed-prefill kv
     # spans land block-aligned in the pool.
     kv_block: int = 128
+    # CacheBlend-style fused non-prefix reuse: consult the store's chunk-
+    # content index at lookup time (StoreLookup.composite) so a BlendPlanner
+    # can plan "fused" admissions — assemble stored chunk KV out of order and
+    # selectively recompute only its planner-chosen r-fraction
+    # (kvcache/fusion.py + kernels/fused_prefill.py).  Off by default: the
+    # seed golden trace replays untouched, and non-Blend planners ignore the
+    # composite field entirely.  Packable attention archs only (assembled KV
+    # needs per-position state); others never see a composite match.
+    fusion_enabled: bool = False
 
 
 @dataclasses.dataclass
@@ -146,6 +155,9 @@ class _Admission:
     nbytes: float = 0.0
     matched: int = 0
     new_tokens: List[int] = dataclasses.field(default_factory=list)
+    # fused admissions: source entries pinned between plan and execute (a
+    # batch-mate's write-back pressure must not evict a fusion source)
+    pins: List[str] = dataclasses.field(default_factory=list)
 
 
 class ServingEngine:
@@ -260,6 +272,27 @@ class ServingEngine:
             self._state = self.api.init_state(
                 cfg, self.ec.max_slots, self.ec.max_len
             )
+        # Fused non-prefix reuse (CacheBlend-style): chunk-composite lookups
+        # + the selective-recompute launch.  Needs the packed path's arch
+        # predicate (assembled KV is per-position attention state) and the
+        # fused model entry point.
+        self._jit_fused = (
+            jax.jit(self._fused_prefill_impl)
+            if self.api.prefill_fused is not None
+            else None
+        )
+        self._fusion_on = (
+            self.ec.fusion_enabled
+            and self.ec.reuse_enabled
+            and self._packable
+            and self._jit_fused is not None
+        )
+        self.fused_jit = JitBucketStats()
+        self.fused_admissions = 0
+        self.fused_reused_tokens = 0
+        self.fused_recompute_tokens = 0
+        self.fused_sources = 0
+        self.fused_busy_s = 0.0
         # packed-admission observability (benchmarks assert on these)
         self.jit_stats = JitBucketStats()
         self.batches = 0
@@ -284,6 +317,12 @@ class ServingEngine:
             params, self.cfg, tokens, caches,
             q_pos=q_pos, q_seg=q_seg, q_rows=q_rows,
             kv_pos=kv_pos, kv_seg=kv_seg, last_idx=last_idx,
+        )
+
+    def _fused_prefill_impl(self, params, tokens, caches, q_pos, q_rows, kv_pos, last_idx):
+        return self.api.prefill_fused(
+            params, self.cfg, tokens, caches,
+            q_pos=q_pos, q_rows=q_rows, kv_pos=kv_pos, last_idx=last_idx,
         )
 
     def _decode_impl(self, params, tokens, state, active):
@@ -417,11 +456,27 @@ class ServingEngine:
         for req, slot in zip(reqs, free):
             a = self._plan_admission(req, slot, events, pending=pending)
             admissions.append(a)
+            if a.plan.action == "fused":
+                # pin every fusion source now: a batch-mate's write-back
+                # could otherwise evict it before the fused fetch executes
+                for eid in a.plan.fused.source_entries:
+                    if eid in self.store.entries:
+                        self.store.pin(eid)
+                        a.pins.append(eid)
+                # the fused fetches hit their tiers' links at the shared
+                # admission instant too: later batch-mates must price them
+                for tier, b in a.lookup.fused_bytes_by_tier.items():
+                    pending.setdefault(tier, []).append(b)
             if a.plan.loads_kv and a.lookup.entry is not None:
                 pending.setdefault(a.lookup.entry.tier, []).append(
                     self._entry_fetch_bytes(a.lookup.entry, a.plan.matched_tokens)
                 )
-        self._execute_packed(admissions, events)
+        packed = [a for a in admissions if a.plan.action != "fused"]
+        if packed:
+            self._execute_packed(packed, events)
+        for a in admissions:
+            if a.plan.action == "fused":
+                self._execute_fused(a, events)
         self._issue_prefetches()
         return True
 
@@ -464,7 +519,7 @@ class ServingEngine:
     ) -> None:
         """Shared admission epilogue (post clock-advance): record fields that
         are common to both execute paths, emit the first token, activate."""
-        a.rec.action = a.plan.action if a.plan.loads_kv else "recompute"
+        a.rec.action = a.plan.action if a.plan.reuses_kv else "recompute"
         a.rec.plan = a.plan
         a.rec.tokens.append(first_tok)
         events.append(
@@ -621,6 +676,125 @@ class ServingEngine:
                 self._c_gpu_s * prefill_s * (len(a.new_tokens) / total_new)
             )
             self._finish_admission(a, int(jnp.argmax(logits[i])), events)
+
+    # -- fused (chunk-composite) execution ------------------------------ #
+    def _execute_fused(self, a: "_Admission", events: List[ev.Event]) -> None:
+        """Execute a ``"fused"`` plan: fetch each source entry's matched
+        rows (fetches issue concurrently — the request waits the slowest),
+        assemble one query-ordered KV buffer with the reused spans preloaded
+        (K delta-RoPE'd to its target position), run ONE selective-recompute
+        launch over just the recompute spans + prompt, and land the full
+        context+prompt state in the slot (block pool or dense).  At
+        ``recompute_frac=1.0`` this is bit-identical to a full recompute
+        admission (tests/test_fusion.py)."""
+        t0 = self.clock.now
+        req, schedule = a.req, a.plan.fused
+        ctx, prompt = list(req.context_tokens), list(req.prompt_tokens)
+
+        sources: Dict[str, Any] = {}
+        delays: List[float] = []
+        fetched: List[tuple] = []  # (tier, nbytes, delay, rows) per source
+        for eid, rows in schedule.rows_by_entry().items():
+            e = self.store.entries[eid]  # pinned at plan time: must exist
+            nbytes = self._entry_fetch_bytes(e, rows)
+            override = nbytes if self.cost_cfg is not self.cfg else None
+            art, delay = self.store.fetch(
+                eid, fraction=rows / max(e.n_tokens, 1), nbytes=override
+            )
+            sources[eid] = art
+            delays.append(delay)
+            fetched.append((e.tier, nbytes, delay, rows))
+        for eid in a.pins:
+            self.store.unpin(eid)
+        a.pins.clear()
+        self._release_prefetch(req.req_id)
+
+        layout = fusion.fused_layout(
+            schedule, len(prompt),
+            align=self.ec.pack_align, bucket_min=self.ec.pack_bucket_min,
+        )
+        caches = fusion.build_fused_caches(
+            self.cfg, schedule, sources, layout.kv_len
+        )
+        arrays = fusion.fused_arrays(schedule, ctx, prompt, layout)
+        jit_hit = self.fused_jit.record((layout.q_len, layout.kv_len))
+        logits, new_caches = self._jit_fused(
+            self.params,
+            jnp.asarray(arrays["tokens"]),
+            caches,
+            jnp.asarray(arrays["q_pos"]),
+            jnp.asarray(arrays["q_rows"]),
+            jnp.asarray(arrays["kv_pos"]),
+            jnp.asarray(arrays["last_idx"]),
+        )
+
+        prefill_s = self.perf.t_prefill_fused(
+            self.cost_cfg, layout.total, layout.n_q
+        )
+        load_s = max(delays, default=0.0)
+        if self.ec.overlap_load:
+            load_s = max(0.0, load_s - prefill_s)
+        for tier, nbytes, delay, rows in fetched:
+            # like the prefix-load path, each KVLoaded carries the delay
+            # charged post-overlap, not the raw link time
+            events.append(
+                ev.KVLoaded(
+                    t_s=t0, req_id=req.req_id, tier=tier, nbytes=nbytes,
+                    load_s=(
+                        max(0.0, delay - prefill_s)
+                        if self.ec.overlap_load else delay
+                    ),
+                    matched_tokens=rows,
+                )
+            )
+        events.append(
+            ev.FusedAdmitted(
+                t_s=t0, req_id=req.req_id, slot=a.slot.index,
+                reused_tokens=schedule.reused_tokens,
+                recompute_tokens=schedule.recompute_tokens,
+                n_spans=len(schedule.spans), n_sources=len(sources),
+                q_len=layout.q_len, kv_len=layout.kv_len, jit_hit=jit_hit,
+            )
+        )
+        events.append(
+            ev.PrefillDone(
+                t_s=t0, req_id=req.req_id,
+                n_tokens=layout.n_q, prefill_s=prefill_s,
+            )
+        )
+
+        # land the assembled+recomputed state: rows [0, total) ARE the
+        # context+prompt state in sequence order.  The artifact carries
+        # whole-kv_block row coverage (the pool landing copies whole blocks)
+        # while pos stays the true token count.
+        seg = paged.PackSegment(
+            slot=a.slot.index, kv_start=0, q_start=0,
+            matched=schedule.reused_tokens, n_new=layout.n_q,
+            n_total=layout.total,
+        )
+        n_rows = -(-layout.total // self.ec.kv_block) * self.ec.kv_block
+        art = paged.packed_to_artifact(
+            self.cfg, new_caches, seg, min(n_rows, layout.kv_len)
+        )._replace(pos=jnp.full((1,), layout.total, jnp.int32))
+        if self._paged_on:
+            self._land_state_in_pool(a.slot, art)
+        else:
+            self._state = paged.insert_slot(
+                self.cfg, self._state, a.slot.index, art
+            )
+
+        self.clock.advance(load_s + prefill_s)
+        self.admission_busy_s += load_s + prefill_s
+        self.fused_busy_s += load_s + prefill_s
+        self.fused_admissions += 1
+        self.fused_reused_tokens += schedule.reused_tokens
+        self.fused_recompute_tokens += schedule.recompute_tokens
+        self.fused_sources += len(sources)
+        a.rec.matched_tokens = schedule.reused_tokens
+        a.rec.load_s = load_s
+        a.rec.prefill_s = prefill_s
+        a.rec.compute_cost += self._c_gpu_s * prefill_s
+        self._finish_admission(a, int(jnp.argmax(logits[0])), events)
 
     # -- shared-block-pool landings (paged decode) ---------------------- #
     def _pool_update(self, dst: np.ndarray, sources) -> None:
@@ -786,9 +960,31 @@ class ServingEngine:
             )
             if wait > 0:
                 queue_wait[entry.tier] = wait
+        composite = None
+        fused_bytes: Dict[str, float] = {}
+        if self._fusion_on and req.embeds is None and frac < 1.0:
+            comp = self.store.lookup_composite(list(req.context_tokens))
+            if comp.matched_tokens > 0:
+                composite = comp
+                for eid, rows in comp.rows_by_entry().items():
+                    src = self.store.entries.get(eid)
+                    if src is None:
+                        continue
+                    fused_bytes[src.tier] = fused_bytes.get(src.tier, 0.0) + (
+                        self._entry_fetch_bytes(src, rows)
+                    )
+                for t, b in fused_bytes.items():
+                    # contended-link visibility for the fused option (and
+                    # batch-mates planned behind it): predicted queueing
+                    # delay for this tier's fused fetch
+                    ahead = () if pending is None else tuple(pending.get(t, ()))
+                    wait = self.store.estimated_queue_wait(t, b, pending=ahead)
+                    if wait > 0:
+                        queue_wait[t] = max(queue_wait.get(t, 0.0), wait)
         return StoreLookup(
             match=match, entry=entry, fraction=frac, partial_ok=partial_ok,
-            queue_wait_s=queue_wait,
+            queue_wait_s=queue_wait, composite=composite,
+            fused_bytes_by_tier=fused_bytes,
         )
 
     def _entry_fetch_bytes(self, e, matched_tokens: int) -> float:
@@ -953,6 +1149,21 @@ class ServingEngine:
                 shared_block_hits=self._paged.shared_block_hits,
             )
         return out
+
+    def fused_stats(self) -> Dict[str, Any]:
+        """Fusion-path counters: fused admissions, reused-vs-recomputed
+        context tokens (the realized CacheBlend ratio), distinct source
+        entries fetched, modeled fused busy time, and the fused launch's own
+        jit bucket hit/miss split."""
+        return {
+            "enabled": self._fusion_on,
+            "admissions": self.fused_admissions,
+            "reused_tokens": self.fused_reused_tokens,
+            "recompute_tokens": self.fused_recompute_tokens,
+            "sources": self.fused_sources,
+            "busy_s": self.fused_busy_s,
+            "jit": self.fused_jit.as_dict(),
+        }
 
     def _store_tier(self) -> str:
         if self.ec.store_tier is not None:

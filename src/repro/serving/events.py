@@ -11,7 +11,9 @@ Lifecycle of one request:
         -> PrefillDone -> TokenEmitted* -> RequestFinished
 
 (StoreWriteBack precedes PrefillDone because the two-phase recompute path
-snapshots the context state between the context and prompt prefills.)
+snapshots the context state between the context and prompt prefills.  A
+fused admission emits one KVLoaded per source entry followed by a
+FusedAdmitted before its PrefillDone.)
 
 ``ClockAdvanced`` appears between requests when the engine is idle and jumps
 simulated time to the next arrival.
@@ -67,6 +69,23 @@ class KVLoaded(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedAdmitted(Event):
+    """One fused selective-recompute admission (CacheBlend-style non-prefix
+    reuse): the request's context was assembled from stored chunk spans
+    (one KVLoaded per source entry precedes this event) and only the
+    recompute spans + prompt ran through the fused prefill launch."""
+
+    slot: int
+    reused_tokens: int  # context tokens served from stored chunk KV
+    recompute_tokens: int  # context tokens recomputed (selected + unmatched)
+    n_spans: int  # execution spans in the schedule
+    n_sources: int  # distinct source entries fetched
+    q_len: int  # bucketed fused launch length (query side)
+    kv_len: int  # bucketed assembled-buffer length
+    jit_hit: bool
+
+
+@dataclasses.dataclass(frozen=True)
 class PrefillDone(Event):
     n_tokens: int  # tokens actually prefilled (context tail + prompt)
     prefill_s: float
@@ -108,8 +127,9 @@ class TierMigrated(Event):
 
 
 AnyEvent = Union[
-    RequestAdmitted, PlanChosen, BatchAdmitted, KVLoaded, PrefillDone,
-    StoreWriteBack, TokenEmitted, RequestFinished, ClockAdvanced, TierMigrated,
+    RequestAdmitted, PlanChosen, BatchAdmitted, KVLoaded, FusedAdmitted,
+    PrefillDone, StoreWriteBack, TokenEmitted, RequestFinished, ClockAdvanced,
+    TierMigrated,
 ]
 
 

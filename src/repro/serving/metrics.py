@@ -48,7 +48,9 @@ def summarize(
     e2e = np.array([r.e2e_s for r in records]) if records else np.zeros(1)
     return ServingSummary(
         n_requests=len(records),
-        reuse_hits=sum(1 for r in records if r.action in ("load", "partial")),
+        reuse_hits=sum(
+            1 for r in records if r.action in ("load", "partial", "fused")
+        ),
         mean_ttft_s=float(ttft.mean()),
         p50_ttft_s=float(np.percentile(ttft, 50)),
         p99_ttft_s=float(np.percentile(ttft, 99)),

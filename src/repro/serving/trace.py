@@ -1,0 +1,88 @@
+"""JSONL live trace exporter over the engine's typed event stream.
+
+One line per event, written (and flushed) as it arrives, so a crashed or
+interrupted run still leaves a readable trace.  Each line is::
+
+    {"event": "TokenEmitted", "t_s": 1.25, "req_id": 3, "token": 17, ...}
+
+— the event class name plus its dataclass fields, recursively serialized
+(``RequestFinished`` lines therefore embed the full ``RequestRecord``
+including its executed ``ReusePlan``/``FusedSchedule``).  Extra key/values
+passed to ``write``/``write_all`` are merged into every line (e.g. a
+``mode`` tag when several engine runs share one file).
+
+Any consumer that kept only the trace file can rebuild the same views the
+in-process stream supports: ``read_trace`` parses it back into dicts, and
+``serving.audit`` / ``serving.metrics.summarize_events`` keep working on the
+live objects.  ``examples/serve_reuse.py --trace PATH`` wires this exporter
+into the end-to-end driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any, Dict, Iterable, List, Optional
+
+
+def event_to_dict(event: Any, **extra: Any) -> Dict[str, Any]:
+    """Flatten one typed event into a JSON-ready dict: class name + fields
+    (nested dataclasses — records, plans, fusion schedules — recurse)."""
+    out: Dict[str, Any] = {"event": type(event).__name__}
+    out.update(dataclasses.asdict(event))
+    out.update(extra)
+    return out
+
+
+class TraceWriter:
+    """Append-mode JSONL sink for the typed event stream.
+
+    Usage::
+
+        with TraceWriter(path) as tw:
+            for event in engine.drain():
+                tw.write(event)
+
+    Lines flush per event (live tailing works); ``n_events`` counts what was
+    written.  Non-JSON-native leaves (numpy scalars, jax arrays) degrade to
+    ``str`` rather than failing the run.
+    """
+
+    def __init__(self, path, *, append: bool = False):
+        self.path = pathlib.Path(path)
+        self._f = open(self.path, "a" if append else "w")
+        self.n_events = 0
+
+    def write(self, event: Any, **extra: Any) -> None:
+        json.dump(event_to_dict(event, **extra), self._f, default=str)
+        self._f.write("\n")
+        self._f.flush()
+        self.n_events += 1
+
+    def write_all(self, events: Iterable[Any], **extra: Any) -> int:
+        n = 0
+        for e in events:
+            self.write(e, **extra)
+            n += 1
+        return n
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "TraceWriter":
+        return self
+
+    def __exit__(self, *exc) -> Optional[bool]:
+        self.close()
+        return None
+
+
+def read_trace(path) -> List[Dict[str, Any]]:
+    """Parse a JSONL trace back into event dicts (blank lines skipped)."""
+    out: List[Dict[str, Any]] = []
+    for line in pathlib.Path(path).read_text().splitlines():
+        line = line.strip()
+        if line:
+            out.append(json.loads(line))
+    return out

@@ -236,6 +236,46 @@ class TestMigration:
         assert len(s.drain_migrations()) == 1
         assert s.drain_migrations() == []
 
+    def test_queue_wakes_on_band_crossings_only(self):
+        """The priority queue removes even the O(entries) walk: a steady
+        store evaluates NOTHING pass after pass, and a hot entry's frequency
+        decay wakes it only at predicted band crossings — O(log) wake-ups
+        over its whole cool-down, after which it has demoted off the hot
+        tier without any exhaustive pass."""
+        s = _store(HIER, migration=BreakEvenMigrator())
+        for i in range(12):
+            eid, _ = s.put(list(range(i * 100, i * 100 + 8)), _art(i), tier="s3")
+            assert eid is not None
+        hot, _ = s.put(list(range(5000, 5008)), _art(99), tier="s3")
+        s.clock.advance(3600.0)
+        for _ in range(50):
+            s.fetch(hot)
+        migs = s.run_migrations()  # first pass: everything fresh -> evaluated
+        assert [(m.entry_id, m.reason) for m in migs] == [(hot, "promote")]
+        assert s.entries[hot].tier == "host_dram"
+        s.clock.advance(10.0)
+        s.run_migrations()  # the moved entry re-evaluates once, then settles
+        evals = s.migration_evals
+        skips = s.migration_skips
+        for _ in range(5):  # steady store: zero evaluations, no walk
+            s.clock.advance(10.0)
+            assert s.run_migrations() == []
+        assert s.migration_evals == evals
+        assert s.migration_skips >= skips + 5 * 13
+        # cool-down: the heap wakes the hot entry ONLY at its predicted band
+        # crossings (freq = uses/age halves per band: ~6 crossings over these
+        # 120 h), each wake-up re-runs break-even and re-arms the next one —
+        # no pass ever touches the cold 12 again
+        before = s.migration_evals
+        for _ in range(30):
+            s.clock.advance(4 * 3600.0)
+            s.run_migrations()
+        assert 1 <= s.migration_evals - before <= 10  # vs 13 * 30 walked
+        # break-even genuinely keeps the (tiny, still-warm) entry in DRAM —
+        # the wake-ups were cheap re-confirmations, not missed moves
+        assert s.entries[hot].tier == "host_dram"
+        check_invariants(s)
+
     def test_banded_pass_matches_full_scan_on_many_entries(self):
         """Regression for the O(entries x tiers) tick: the band-indexed pass
         must produce exactly the moves of an exhaustive scan while actually

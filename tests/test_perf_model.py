@@ -95,6 +95,34 @@ def test_paged_decode_prices_live_blocks():
     )
 
 
+def test_fused_prefill_prices_recompute_fraction():
+    """t_prefill_fused bills matmul/attention compute for the recompute
+    tokens only while the memory side still streams params + the full
+    assembled KV: a small r is strictly cheaper than full prefill, monotone
+    in n_recompute, and full recompute delegates to t_prefill EXACTLY (the
+    r=1.0 bit-exactness anchor's pricing analogue)."""
+    cfg = get_config("llama-7b")
+    L = 8192
+    full = PM.t_prefill(cfg, L)
+    fused = PM.t_prefill_fused(cfg, L, int(0.15 * L))
+    assert 0 < fused < full
+    # monotone in the recompute count
+    assert PM.t_prefill_fused(cfg, L, 2048) >= PM.t_prefill_fused(cfg, L, 512)
+    # exact delegation at full recompute (and clamped past it)
+    assert PM.t_prefill_fused(cfg, L, L) == full
+    assert PM.t_prefill_fused(cfg, L, 10 * L) == full
+    assert PM.t_prefill_fused(cfg, L, 0) == 0.0
+    assert PM.t_prefill_fused(cfg, 0, 128) == 0.0
+    # floor: the launch can never be cheaper than its parameter read
+    hw = PM.hw
+    from repro.models.registry import count_active_params
+
+    param_read = count_active_params(cfg) * 2 / (
+        hw.devices * hw.hbm_bw * hw.membw_eff
+    )
+    assert PM.t_prefill_fused(cfg, L, 1) >= param_read
+
+
 def test_more_chips_never_slower():
     cfg = get_config("granite-34b")
     small, big = PerfModel(tpu_v5e(8)), PerfModel(tpu_v5e(256))

@@ -1,0 +1,86 @@
+"""JSONL live trace exporter (serving/trace.py): the event stream written to
+disk round-trips — every event becomes one parseable line carrying its type,
+time, request id and fields, including the nested record/plan payloads of
+RequestFinished (and the FusedSchedule of fused plans)."""
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models import registry
+from repro.serving import BlendPlanner, EngineConfig, Request, ServingEngine
+from repro.serving import events as ev
+from repro.serving.trace import TraceWriter, read_trace
+
+
+def _run_fused_engine():
+    cfg = reduced_config(get_config("llama-7b"))
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    chunk = 16
+    pool = [list(map(int, rng.integers(0, cfg.vocab, chunk))) for _ in range(3)]
+    reqs = [
+        dict(req_id=0, context_tokens=sum(pool, []),
+             prompt_tokens=[1, 2, 3, 4], max_new_tokens=2, arrival_s=0.0,
+             expected_reuses=3),
+        dict(req_id=1, context_tokens=pool[2] + pool[0] + pool[1],
+             prompt_tokens=[5, 6, 7, 8], max_new_tokens=2, arrival_s=20.0,
+             expected_reuses=3),
+    ]
+    eng = ServingEngine(
+        cfg, params,
+        engine_cfg=EngineConfig(max_slots=2, max_len=128, chunk_tokens=chunk,
+                                fusion_enabled=True),
+        planner=BlendPlanner(recompute_frac=0.25, always=True),
+    )
+    for r in reqs:
+        eng.submit(Request(**r))
+    return eng
+
+
+def test_trace_round_trips_event_stream(tmp_path):
+    eng = _run_fused_engine()
+    path = tmp_path / "events.jsonl"
+    events = []
+    with TraceWriter(path) as tw:
+        for e in eng.drain():
+            events.append(e)
+            tw.write(e, mode="fused")
+        n = tw.n_events
+    assert n == len(events) > 0
+
+    lines = read_trace(path)
+    assert len(lines) == len(events)
+    assert [l["event"] for l in lines] == [type(e).__name__ for e in events]
+    assert all(l["mode"] == "fused" for l in lines)
+    # times and req ids survive verbatim
+    assert [l["t_s"] for l in lines] == [e.t_s for e in events]
+    assert [l["req_id"] for l in lines] == [e.req_id for e in events]
+    # the fused admission serialized with its payload fields
+    fused = [l for l in lines if l["event"] == "FusedAdmitted"]
+    assert len(fused) == 1
+    assert fused[0]["reused_tokens"] > 0 and fused[0]["n_sources"] >= 1
+    # RequestFinished embeds the full record, including the executed plan
+    fins = [l for l in lines if l["event"] == "RequestFinished"]
+    assert sorted(f["record"]["req_id"] for f in fins) == [0, 1]
+    fused_rec = next(f for f in fins if f["record"]["req_id"] == 1)
+    assert fused_rec["record"]["action"] == "fused"
+    assert fused_rec["record"]["plan"]["fused"]["recompute_frac"] == 0.25
+    # tokens reconstructed from the trace match the live stream's view
+    want = ev.tokens_from_events(events)
+    got = {}
+    for l in lines:
+        if l["event"] == "TokenEmitted":
+            got.setdefault(l["req_id"], []).append(l["token"])
+    assert got == want
+
+
+def test_trace_append_mode(tmp_path):
+    path = tmp_path / "t.jsonl"
+    e = ev.ClockAdvanced(t_s=1.0, req_id=-1, to_s=1.0)
+    with TraceWriter(path) as tw:
+        tw.write(e)
+    with TraceWriter(path, append=True) as tw:
+        tw.write(e, wave=2)
+    lines = read_trace(path)
+    assert len(lines) == 2 and lines[1]["wave"] == 2
