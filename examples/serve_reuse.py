@@ -17,8 +17,15 @@ Ends with the per-request SLO audit of the hierarchy run (serving/audit.py).
 ``--trace PATH`` exports every policy's typed event stream as JSONL (one
 line per event, tagged with its ``mode``; serving/trace.py).
 
+With ``--replicas N`` (N > 1) the same workload instead runs through a
+``ServingCluster``: N engine replicas with private host_dram/local_nvme
+tiers over ONE shared s3 core, requests placed by ``--router`` (affinity =
+gossiped-digest cache-affinity routing, round_robin = cache-oblivious
+baseline), ending with the per-replica SLO audit table.
+
     PYTHONPATH=src python examples/serve_reuse.py [--requests 24]
         [--arch llama-7b] [--trace events.jsonl]
+        [--replicas 2 --router affinity]
 """
 import argparse
 
@@ -30,7 +37,15 @@ from repro.core.pricing import AWS_PAPER
 from repro.data.synthetic import WorkloadSpec, serving_workload
 from repro.kvcache.hierarchy import TierSpec
 from repro.models import registry
-from repro.serving import CostAwarePlanner, EngineConfig, Request, ServingEngine
+from repro.serving import (
+    ClusterConfig,
+    CostAwarePlanner,
+    EngineConfig,
+    Request,
+    RoundRobinRouter,
+    ServingCluster,
+    ServingEngine,
+)
 from repro.serving import audit as audit_mod
 from repro.serving import trace as trace_mod
 from repro.serving.scheduler import HedgePolicy
@@ -72,6 +87,57 @@ def build_engine(cfg, params, mode: str, cost_arch: str):
     )
 
 
+def run_cluster(cfg, params, reqs, args):
+    """Cluster branch: the workload through N replicas behind one router,
+    ending with the per-replica SLO audit (serving/audit.cluster_audit)."""
+    ec = EngineConfig(
+        max_slots=4, max_len=256, chunk_tokens=16, cost_arch=args.arch,
+        tier_specs=[
+            TierSpec("host_dram", 64.0),
+            TierSpec("local_nvme", 512.0),
+            TierSpec("s3", 4096.0, concurrency=2),
+        ],
+        store_tier="host_dram",
+    )
+    tracer = trace_mod.TraceWriter(args.trace) if args.trace else None
+    cl = ServingCluster(
+        cfg, params,
+        cluster_cfg=ClusterConfig(
+            n_replicas=args.replicas, gossip_interval_s=0.5,
+        ),
+        engine_cfg=ec,
+        router=RoundRobinRouter() if args.router == "round_robin" else None,
+        planner_factory=CostAwarePlanner,
+        pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF),
+        trace=tracer,
+    )
+    requests = [Request(**r.__dict__) for r in reqs]
+    for r in requests:
+        cl.submit(r)
+    s = cl.run()
+
+    print(f"cluster: {args.replicas} replicas, {args.router} router, "
+          f"economics at {args.arch} scale")
+    print(f"requests {s.n_requests}, reuse hits {s.reuse_hits} "
+          f"(hit rate {s.hit_rate:.3f}), total cost ${s.total_cost:.4f}, "
+          f"mean TTFT {s.mean_ttft_s:.3f} s, "
+          f"{s.tokens_generated} tokens over {s.horizon_s:.2f} s")
+    stats = cl.stats()
+    shared = stats.get("shared")
+    print(f"gossip ticks {stats['gossip_ticks']}, "
+          f"rebalances {stats['rebalances']}"
+          + (f", shared tier: {shared['n_keys']} keys over "
+             f"{shared['n_contents']} contents "
+             f"({shared['dedup_hits']} dedup hits)" if shared else ""))
+
+    print("\nSLO audit (per replica):")
+    rows = audit_mod.cluster_audit(cl.events_by_replica, requests)
+    print(audit_mod.format_cluster_table(rows))
+    if tracer is not None:
+        tracer.close()
+        print(f"\nwrote {tracer.n_events} events to {tracer.path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama-7b", help="economics arch (full size)")
@@ -79,6 +145,10 @@ def main():
     ap.add_argument("--contexts", type=int, default=6)
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="export every mode's typed event stream as JSONL")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="> 1 serves the workload through a ServingCluster")
+    ap.add_argument("--router", choices=("affinity", "round_robin"),
+                    default="affinity", help="cluster request placement")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
@@ -92,6 +162,10 @@ def main():
         arrival_rate_per_s=2.0, seed=0,
     )
     reqs = serving_workload(cfg, spec)
+
+    if args.replicas > 1:
+        run_cluster(cfg, params, reqs, args)
+        return
 
     print(f"{len(reqs)} requests over {args.contexts} shared contexts "
           f"({spec.reuses_per_context}x reuse), economics at {args.arch} scale\n")

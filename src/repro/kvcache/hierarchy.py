@@ -58,7 +58,7 @@ from repro.kvcache.backend import (
 )
 from repro.kvcache.chunks import ChunkTrie, PrefixMatch
 from repro.kvcache.fusion import ChunkIndex, CompositeMatch
-from repro.kvcache.transfer import SimClock, TransferModel
+from repro.kvcache.transfer import SimClock, TransferHandle, TransferModel
 
 # Storage rate assumed by eviction/migration scoring when no Pricing is
 # plumbed in (io2's ~$0.125/GB-month); callers with real catalogs pass
@@ -224,8 +224,8 @@ class ConcurrencyLimitedBackend:
     def name(self) -> str:
         return self.inner.name
 
-    def put(self, key, payload, nbytes, *, charge: bool = True):
-        h = self.inner.put(key, payload, nbytes, charge=charge)
+    def put(self, key, payload, nbytes, *, charge: bool = True, **kw):
+        h = self.inner.put(key, payload, nbytes, charge=charge, **kw)
         wait = self._reserve(h.delay_s)
         if wait == 0.0:
             return h
@@ -258,6 +258,152 @@ class ConcurrencyLimitedBackend:
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"ConcurrencyLimited({self.inner!r}, limit={self.limit})"
+
+
+class SharedBackendCore:
+    """Content-addressed payload pool behind a tier SHARED by several stores
+    (the cluster's cold tier: every replica's s3 backend is a view onto one
+    of these).  Ownership is refcounted per content id: each namespaced key
+    (one replica's entry) holds one reference, and the payload bytes die only
+    when the last reference drops — so one replica evicting (or crashing out
+    of the cluster) can never orphan an entry another replica still holds.
+
+    Identical content written by two replicas is stored ONCE: the second
+    write is a dedup hit (no bytes move, no fee).  Capacity/GB-hour
+    accounting stays per-store (each owner is billed for its logical bytes);
+    the cluster-level dedup saving is surfaced via ``stats()`` rather than
+    silently altering any store's bill."""
+
+    def __init__(self):
+        # content id -> (payload, nbytes); one copy per distinct content
+        self._contents: Dict[str, Tuple[Any, float]] = {}
+        self._refs: Dict[str, int] = {}
+        # namespaced key (one store's entry) -> content id it references
+        self._keys: Dict[str, str] = {}
+        self.dedup_hits = 0
+
+    def write(self, key: str, cid: str, payload: Any, nbytes: float) -> bool:
+        """Bind ``key`` to content ``cid``.  Returns True when the bytes were
+        already resident (dedup: the caller's upload is a no-op)."""
+        old = self._keys.get(key)
+        if old is not None:
+            self._release(old)
+        dedup = cid in self._contents
+        if dedup:
+            self.dedup_hits += 1
+        else:
+            self._contents[cid] = (payload, nbytes)
+        self._keys[key] = cid
+        self._refs[cid] = self._refs.get(cid, 0) + 1
+        return dedup
+
+    def read(self, key: str) -> Tuple[Any, float]:
+        return self._contents[self._keys[key]]
+
+    def has(self, key: str) -> bool:
+        return key in self._keys
+
+    def drop(self, key: str) -> bool:
+        cid = self._keys.pop(key, None)
+        if cid is None:
+            return False
+        self._release(cid)
+        return True
+
+    def _release(self, cid: str) -> None:
+        n = self._refs.get(cid, 0) - 1
+        if n <= 0:
+            self._refs.pop(cid, None)
+            self._contents.pop(cid, None)
+        else:
+            self._refs[cid] = n
+
+    def drop_namespace(self, prefix: str) -> int:
+        """Release every key under ``prefix`` (a replica leaving the
+        cluster); shared payloads survive while other replicas hold them."""
+        victims = [k for k in self._keys if k.startswith(prefix)]
+        for k in victims:
+            self.drop(k)
+        return len(victims)
+
+    def stats(self) -> Dict[str, float]:
+        resident = sum(nb for _, nb in self._contents.values())
+        logical = sum(self._contents[c][1] for c in self._keys.values())
+        return {
+            "n_contents": len(self._contents),
+            "n_keys": len(self._keys),
+            "resident_bytes": resident,
+            "logical_bytes": logical,
+            "dedup_saved_bytes": logical - resident,
+            "dedup_hits": self.dedup_hits,
+        }
+
+
+class SharedTierBackend(ObjectStoreBackend):
+    """One store's view onto a :class:`SharedBackendCore`: keys are
+    namespaced per owner (``r0:ctx3``), transfer delays/fees bill through the
+    OWNER's TransferModel/clock, and writes whose content already sits in the
+    core complete instantly with a ``dedup`` handle (the bytes never move).
+    ``TieredStore`` passes each entry's token-content id via ``put``'s
+    ``content=`` kwarg when the backend advertises ``content_addressed``."""
+
+    content_addressed = True
+
+    def __init__(self, name: str = "s3", *, core: SharedBackendCore,
+                 namespace: str = "", **kw):
+        super().__init__(name, **kw)
+        self.core = core
+        self.namespace = namespace
+
+    def _key(self, key: str) -> str:
+        return f"{self.namespace}:{key}" if self.namespace else key
+
+    def put(self, key, payload, nbytes, *, charge: bool = True,
+            content: Optional[str] = None):
+        if nbytes < 0:
+            raise ValueError(
+                f"nbytes must be >= 0, got {nbytes!r} "
+                f"(tier {self.name!r}, key {key!r})"
+            )
+        cid = content if content is not None else self._key(key)
+        if self.core.write(self._key(key), cid, payload, nbytes):
+            # identical bytes already resident service-wide: free write
+            return TransferHandle(
+                key=key, tier=self.name, kind="store", nbytes=0.0,
+                delay_s=0.0, issued_at_s=self.clock.now, dedup=True,
+            )
+        delay = 0.0
+        if self.transfer is not None and charge:
+            delay = self.transfer.store_delay(nbytes, self.name) + self.link_overhead_s
+        return TransferHandle(
+            key=key, tier=self.name, kind="store", nbytes=nbytes,
+            delay_s=delay, issued_at_s=self.clock.now,
+        )
+
+    # -- storage primitives route through the shared core ---------------- #
+    def _write(self, key: str, payload: Any, nbytes: float) -> None:
+        self.core.write(self._key(key), self._key(key), payload, nbytes)
+
+    def _read(self, key: str) -> Tuple[Any, float]:
+        try:
+            return self.core.read(self._key(key))
+        except KeyError:
+            raise KeyError(
+                f"{type(self).__name__} tier {self.name!r} has no payload "
+                f"under key {key!r}"
+            ) from None
+
+    def _drop(self, key: str) -> bool:
+        return self.core.drop(self._key(key))
+
+    def _has(self, key: str) -> bool:
+        return self.core.has(self._key(key))
+
+    def release_namespace(self) -> int:
+        """Drop every key this view owns (the owning replica leaves)."""
+        return self.core.drop_namespace(
+            f"{self.namespace}:" if self.namespace else ""
+        )
 
 
 _BACKEND_KINDS = {
@@ -318,6 +464,10 @@ class StoredEntry:
     # position-independent content hashes of the entry's complete chunks —
     # its footprint in the fusion ChunkIndex, removed on eviction.
     content_chunks: List[str] = dataclasses.field(default_factory=list)
+    # whole-context content hash (exact token sequence): the cross-store
+    # dedup identity on a content-addressed shared tier, and the traffic key
+    # for cluster rebalancing.  None when the store has no shared backend.
+    content_key: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -368,7 +518,9 @@ class BreakEvenMigrator:
     # yet informative).
     min_residency_s: float = 0.0
 
-    def tier_rate(self, store: "TieredStore", e: StoredEntry, tier: str, freq_per_h: float) -> float:
+    def rate_parts(self, store: "TieredStore", e: StoredEntry, tier: str) -> Tuple[float, float]:
+        """(hold $/h, fetch $/use) for ``e`` in ``tier`` — the two lines of
+        the affine rate(freq) = hold + freq * fetch."""
         hold = store._gb_hour_rate(tier) * e.nbytes / GB
         c_gpu = self.compute_cost_per_s
         if c_gpu is None:
@@ -380,7 +532,37 @@ class BreakEvenMigrator:
         fetch = c_gpu * store.backends[tier].estimate_load_delay(e.nbytes)
         if store.pricing is not None and tier in store.pricing.tiers:
             fetch += store.pricing.tiers[tier].per_gb_transfer_fee * e.nbytes / GB
+        return hold, fetch
+
+    def tier_rate(self, store: "TieredStore", e: StoredEntry, tier: str, freq_per_h: float) -> float:
+        hold, fetch = self.rate_parts(store, e, tier)
         return hold + freq_per_h * fetch
+
+    def crossing_freq(self, store: "TieredStore", e: StoredEntry) -> float:
+        """Largest reuse frequency (per hour) at which some slower-fetch tier
+        starts beating the current one by ``min_savings_per_hour``.  Between
+        touches freq decays monotonically, so an entry that just evaluated to
+        "stay put" next flips exactly when its freq falls below this — the
+        break-even crossing in closed form.  Each candidate tier's rate is
+        affine in freq (``hold + freq * fetch``); a slower-fetch (cheaper-
+        hold) tier overtakes below
+
+            f_t = (hold_cur - hold_t - min_savings) / (fetch_t - fetch_cur)
+
+        and the first crossing reached from above is max over tiers.  Tiers
+        with fetch <= fetch_cur only lose ground as freq decays: no crossing.
+        Returns 0.0 when no decay can ever flip the decision."""
+        hold_cur, fetch_cur = self.rate_parts(store, e, e.tier)
+        f_star = 0.0
+        for t in store.tier_order:
+            if t == e.tier:
+                continue
+            hold_t, fetch_t = self.rate_parts(store, e, t)
+            if fetch_t <= fetch_cur:
+                continue
+            f = (hold_cur - hold_t - self.min_savings_per_hour) / (fetch_t - fetch_cur)
+            f_star = max(f_star, f)
+        return f_star
 
     def target(self, store: "TieredStore", e: StoredEntry) -> Optional[str]:
         """Best tier for ``e`` (None = stay put)."""
@@ -446,6 +628,11 @@ class TieredStore:
         )
         missing = set(self.tier_order) - set(self.backends)
         assert not missing, f"tiers without a backend: {sorted(missing)}"
+        # any content-addressed backend (a shared tier) makes the store
+        # compute whole-context content keys at put time for cross-store dedup
+        self._content_addressed = any(
+            getattr(b, "content_addressed", False) for b in self.backends.values()
+        )
         self.pricing = pricing
         self.trie = ChunkTrie(chunk_tokens)
         # position-independent per-chunk content index maintained alongside
@@ -580,14 +767,38 @@ class TieredStore:
             saved_per_use=saved_per_use,
             seq=n,
             content_chunks=content,
+            content_key=(
+                self.content_key(tokens) if self._content_addressed else None
+            ),
         )
         self.entries[entry_id] = e
         ts.used_bytes += nbytes
         self.trie_version += 1
         if self.migration is not None:
             self._mig_dirty.add(entry_id)
-        handle = self.backends[tier].put(entry_id, artifact, nbytes)
+        handle = self._backend_put(e, artifact, tier, nbytes)
         return entry_id, (handle.delay_s if sync else 0.0)
+
+    @staticmethod
+    def content_key(tokens: Sequence[int]) -> str:
+        """Whole-context content id: the exact token sequence hashed — safe
+        as a cross-store dedup identity (chain hashes truncate to chunk
+        multiples, so two different tails could collide there)."""
+        return hashlib.sha256("|".join(map(str, tokens)).encode()).hexdigest()
+
+    def _backend_put(self, e: StoredEntry, payload: Any, tier: str,
+                     nbytes: float, *, charge: bool = True):
+        """Write an entry's bytes to ``tier``, passing the content identity
+        to content-addressed (shared) backends so identical contexts stored
+        by sibling stores dedup service-wide.  The compression flag joins the
+        id: an int8 artifact is NOT the same bytes as its fp16 twin."""
+        b = self.backends[tier]
+        if e.content_key is not None and getattr(b, "content_addressed", False):
+            return b.put(
+                e.entry_id, payload, nbytes, charge=charge,
+                content=f"{e.content_key}:c{int(e.compressed)}",
+            )
+        return b.put(e.entry_id, payload, nbytes, charge=charge)
 
     # ------------------------------------------------------------------ #
     # Read path
@@ -680,7 +891,7 @@ class TieredStore:
         self.tiers[from_tier].used_bytes -= e.nbytes
         e.tier, e.nbytes, e.compressed = to_tier, new_nbytes, new_compressed
         dst.used_bytes += new_nbytes
-        self.backends[to_tier].put(entry_id, new_payload, new_nbytes, charge=False)
+        self._backend_put(e, new_payload, to_tier, new_nbytes, charge=False)
         self._mig_dirty.add(entry_id)  # tier changed: re-evaluate fresh
         mig = TierMigration(
             t_s=self.clock.now, entry_id=entry_id, from_tier=from_tier,
@@ -697,24 +908,31 @@ class TieredStore:
 
     def _mig_schedule(self, e: StoredEntry) -> None:
         """Re-arm an entry's next migration wake-up after it evaluated to
-        "stay put".  The break-even decision depends on the entry's
-        reuse-frequency *band* (log2 bucket of uses/age): between touches the
-        frequency decays monotonically, so the instant it falls across its
-        band's lower edge is closed-form —
+        "stay put".  Between touches reuse frequency uses/age decays
+        monotonically, so the break-even decision next flips at the EXACT
+        closed-form crossing: the instant freq falls to the largest frequency
+        at which a slower-fetch tier starts winning
+        (``BreakEvenMigrator.crossing_freq``) —
 
-            uses / age_h == 2^band   =>   t = created + 3600 * uses / 2^band
+            uses / age_h == f*   =>   t = created + 3600 * uses / f*
 
         — and that (or the min-residency gate expiring, if sooner) is the
-        next time the decision can flip without an event.  Event-driven
-        flips (fetch, tier move, unpin, repricing) mark the entry dirty
-        instead.  Entries never fetched have no band to decay: no wake-up."""
+        next time the decision can change without an event.  (Earlier
+        revisions woke at the entry's log2 *band* edge instead, which within
+        a band could lag the true crossing by up to 2x freq drift — the
+        drift-fix regression in tests/test_hierarchy.py pins the exact
+        time.)  Event-driven flips (fetch, tier move, unpin, repricing) mark
+        the entry dirty instead.  Entries never fetched have frequency zero
+        already: if staying won at freq 0, no decay can flip it — no
+        wake-up.  Likewise when no crossing exists below the current freq
+        (f* <= 0)."""
         due = math.inf
         now = self.clock.now
         if e.uses > 0:
-            age_h = max((now - e.created_s) / 3600.0, 1e-9)
-            band = math.floor(math.log2(e.uses / age_h))
-            due = e.created_s + 3600.0 * e.uses / (2.0 ** band)
-            due = due * (1 + 1e-12) + 1e-9  # strictly past the edge
+            f_star = self.migration.crossing_freq(self, e)
+            if f_star > 0.0:
+                due = max(now, e.created_s + 3600.0 * e.uses / f_star)
+                due = due * (1 + 1e-12) + 1e-9  # strictly past the crossing
         mig = self.migration
         if mig.min_residency_s > 0 and now - e.created_s < mig.min_residency_s:
             due = min(due, e.created_s + mig.min_residency_s)
@@ -878,10 +1096,29 @@ class TieredStore:
         self.evictions += 1
         return True
 
+    def digest_hashes(self) -> List[str]:
+        """Every hash an affinity router could match against this store: the
+        chain hashes (prefix reuse), chunk-content hashes (fused reuse), and
+        whole-context content keys of all live entries — the bloom-digest
+        gossip surface (``serving/router.py``)."""
+        out: List[str] = []
+        for e in self.entries.values():
+            out.extend(e.chain)
+            out.extend(e.content_chunks)
+            if e.content_key is not None:
+                out.append(e.content_key)
+        return out
+
     # ------------------------------------------------------------------ #
     def stats(self) -> Dict[str, Any]:
         self._accrue()
+        shared = {
+            n: b.core.stats()
+            for n, b in self.backends.items()
+            if isinstance(getattr(b, "core", None), SharedBackendCore)
+        }
         return {
+            **({"shared": shared} if shared else {}),
             "entries": len(self.entries),
             "evictions": self.evictions,
             "rejected_puts": self.rejected_puts,

@@ -33,6 +33,10 @@ class TransferHandle:
     # time spent waiting for a free slot on a concurrency-limited link
     # (``hierarchy.ConcurrencyLimitedBackend``); included in ``delay_s``.
     queue_s: float = 0.0
+    # True when a content-addressed shared tier already held identical bytes
+    # (``hierarchy.SharedTierBackend``): no upload happened, so nbytes/delay
+    # are zero and no fee accrues.
+    dedup: bool = False
 
     @property
     def completes_at_s(self) -> float:

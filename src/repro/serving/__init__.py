@@ -1,5 +1,6 @@
 """Step-driven serving engine with stored-KV-cache reuse (plan/execute API)."""
 from repro.serving import audit  # noqa: F401
+from repro.serving.cluster import ClusterConfig, ServingCluster  # noqa: F401
 from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
 from repro.serving.planner import (  # noqa: F401
     AlwaysReusePlanner,
@@ -10,3 +11,11 @@ from repro.serving.planner import (  # noqa: F401
     StoreLookup,
 )
 from repro.serving.request import Request  # noqa: F401
+from repro.serving.router import (  # noqa: F401
+    AffinityRouter,
+    BloomDigest,
+    ConsistentHashRing,
+    ReplicaView,
+    RoundRobinRouter,
+    RouteDecision,
+)

@@ -78,6 +78,43 @@ def slo_summary(rows: List[AuditRow]) -> Dict[str, int]:
     }
 
 
+def cluster_audit(
+    events_by_replica: List[List[ev.Event]],
+    requests: Optional[Iterable[Request]] = None,
+) -> Dict[int, List[AuditRow]]:
+    """Per-replica audit over a cluster's replica-tagged event streams
+    (``ServingCluster.events_by_replica``).  The SLO source is shared: a
+    request's SLO is known at submit time, not per replica."""
+    reqs = list(requests or ())
+    return {
+        i: audit(evs, reqs) for i, evs in enumerate(events_by_replica)
+    }
+
+
+def format_cluster_table(rows_by_replica: Dict[int, List[AuditRow]]) -> str:
+    """Per-replica audit tables plus one aggregate SLO line — the cluster
+    version of ``format_table`` (``examples/serve_reuse.py --replicas N``)."""
+    sections: List[str] = []
+    all_rows: List[AuditRow] = []
+    for i in sorted(rows_by_replica):
+        rows = rows_by_replica[i]
+        if not rows:
+            continue
+        s = slo_summary(rows)
+        sections.append(
+            f"-- replica {i}: {s['requests']} requests, "
+            f"{s['slo_met']} SLO ok, {s['slo_violated']} missed --"
+        )
+        sections.append(format_table(rows))
+        all_rows.extend(rows)
+    agg = slo_summary(all_rows)
+    sections.append(
+        f"== cluster: {agg['requests']} requests, {agg['slo_met']} SLO ok, "
+        f"{agg['slo_violated']} missed, {agg['no_slo']} no-SLO =="
+    )
+    return "\n".join(sections)
+
+
 def format_table(rows: List[AuditRow]) -> str:
     """Fixed-width text table of the audit (the example's printout)."""
     header = (

@@ -171,6 +171,9 @@ class ServingEngine:
         backends: Optional[Dict[str, StorageBackend]] = None,
         pricing: Optional[Pricing] = None,
         perf: Optional[PerfModel] = None,
+        clock: Optional[SimClock] = None,
+        transfer: Optional[TransferModel] = None,
+        on_token=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -185,8 +188,15 @@ class ServingEngine:
         else:
             self.cost_cfg = cfg
 
-        self.clock = SimClock()
-        self.transfer = TransferModel(self.perf, self.pricing)
+        # clock/transfer are injectable so a ServingCluster can give every
+        # replica its own simulated timeline and per-replica fee accounting
+        # while tying shared backends to the right owner (serving/cluster.py)
+        self.clock = clock or SimClock()
+        self.transfer = transfer or TransferModel(self.perf, self.pricing)
+        # streaming per-token hook (off by default): called with every
+        # TokenEmitted event, in emission order — first tokens at admission
+        # and each decode step's batch in slot order.
+        self.on_token = on_token
         self._c_gpu_s = self.pricing.compute.cost_per_hour / 3600.0
         if self.ec.tier_specs is not None:
             specs = list(self.ec.tier_specs)
@@ -351,6 +361,15 @@ class ServingEngine:
     def idle(self) -> bool:
         """Nothing queued and nothing decoding."""
         return len(self.queue) == 0 and not any(s.active for s in self.slots)
+
+    def load(self) -> int:
+        """Requests this replica currently owes work to (queued + in a slot)
+        — the router's load signal."""
+        return len(self.queue) + sum(1 for s in self.slots if s.active)
+
+    def free_capacity(self) -> int:
+        """Slots not yet spoken for by queued or active requests (floor 0)."""
+        return max(0, self.ec.max_slots - self.load())
 
     def step(self) -> List[ev.Event]:
         """Advance the engine by one scheduling step and return its events:
@@ -522,11 +541,12 @@ class ServingEngine:
         a.rec.action = a.plan.action if a.plan.reuses_kv else "recompute"
         a.rec.plan = a.plan
         a.rec.tokens.append(first_tok)
-        events.append(
-            ev.TokenEmitted(
-                t_s=self.clock.now, req_id=a.req.req_id, token=first_tok, index=0
-            )
+        tok_ev = ev.TokenEmitted(
+            t_s=self.clock.now, req_id=a.req.req_id, token=first_tok, index=0
         )
+        events.append(tok_ev)
+        if self.on_token is not None:
+            self.on_token(tok_ev)
         a.slot.request = a.req
         a.slot.record = a.rec
         a.slot.generated = 1
@@ -1210,12 +1230,13 @@ class ServingEngine:
             s.record.decode_s += step_s
             s.record.compute_cost += per_req_cost
             s.last_token = tok
-            events.append(
-                ev.TokenEmitted(
-                    t_s=self.clock.now, req_id=s.request.req_id,
-                    token=tok, index=s.generated,
-                )
+            tok_ev = ev.TokenEmitted(
+                t_s=self.clock.now, req_id=s.request.req_id,
+                token=tok, index=s.generated,
             )
+            events.append(tok_ev)
+            if self.on_token is not None:
+                self.on_token(tok_ev)
             s.generated += 1
             self._maybe_finish(s, events)
 

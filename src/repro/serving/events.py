@@ -126,10 +126,38 @@ class TierMigrated(Event):
     reason: str  # "promote" | "demote" | "spill"
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestRouted(Event):
+    """A cluster router chose a replica for this request (emitted by
+    ``ServingCluster`` before the replica's own RequestAdmitted).
+    ``matched_tokens`` is the DIGEST-predicted overlap at routing time — a
+    stale/false-positive prediction shows up here larger than the landing
+    replica's realized KVLoaded, which is exactly the staleness cost."""
+
+    replica: int
+    matched_tokens: int  # digest-predicted overlap (not the realized one)
+    score: float  # marginal routing cost of the chosen replica ($)
+    ring_owner: int  # consistent-hash baseline placement (-1: oblivious)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaRebalanced(Event):
+    """Cluster rebalancing copied a hot entry toward its traffic: the target
+    replica now holds its own hot-tier copy (replicated residency — the
+    donor keeps serving until then, so there is no unreachable window).
+    req_id is -1: an economics pass, not a request."""
+
+    content_key: str
+    from_replica: int
+    to_replica: int
+    nbytes: float
+    hits: int  # routed hits at the target that justified the copy
+
+
 AnyEvent = Union[
     RequestAdmitted, PlanChosen, BatchAdmitted, KVLoaded, FusedAdmitted,
     PrefillDone, StoreWriteBack, TokenEmitted, RequestFinished, ClockAdvanced,
-    TierMigrated,
+    TierMigrated, RequestRouted, ReplicaRebalanced,
 ]
 
 

@@ -236,12 +236,12 @@ class TestMigration:
         assert len(s.drain_migrations()) == 1
         assert s.drain_migrations() == []
 
-    def test_queue_wakes_on_band_crossings_only(self):
+    def test_queue_wakes_at_exact_break_even_crossing_only(self):
         """The priority queue removes even the O(entries) walk: a steady
-        store evaluates NOTHING pass after pass, and a hot entry's frequency
-        decay wakes it only at predicted band crossings — O(log) wake-ups
-        over its whole cool-down, after which it has demoted off the hot
-        tier without any exhaustive pass."""
+        store evaluates NOTHING pass after pass, and a cooling hot entry is
+        woken exactly ONCE — at its closed-form break-even crossing — where
+        it demotes.  (The band-edge schedule this replaces re-confirmed at
+        every log2 edge: ~6 wasted wake-ups over the same cool-down.)"""
         s = _store(HIER, migration=BreakEvenMigrator())
         for i in range(12):
             eid, _ = s.put(list(range(i * 100, i * 100 + 8)), _art(i), tier="s3")
@@ -262,18 +262,66 @@ class TestMigration:
             assert s.run_migrations() == []
         assert s.migration_evals == evals
         assert s.migration_skips >= skips + 5 * 13
-        # cool-down: the heap wakes the hot entry ONLY at its predicted band
-        # crossings (freq = uses/age halves per band: ~6 crossings over these
-        # 120 h), each wake-up re-runs break-even and re-arms the next one —
-        # no pass ever touches the cold 12 again
+        # the armed wake-up IS the break-even crossing: the exact instant
+        # freq = uses/age decays to crossing_freq, not a log2 band edge
+        e = s.entries[hot]
+        f_star = s.migration.crossing_freq(s, e)
+        assert f_star > 0.0
+        due = s._mig_next[hot]
+        assert due == pytest.approx(
+            e.created_s + 3600.0 * e.uses / f_star, rel=1e-9
+        )
+        # the whole cool-down short of the crossing costs ZERO evaluations:
+        # 30 passes over 120 h wake nobody, hot stays put
         before = s.migration_evals
         for _ in range(30):
             s.clock.advance(4 * 3600.0)
-            s.run_migrations()
-        assert 1 <= s.migration_evals - before <= 10  # vs 13 * 30 walked
-        # break-even genuinely keeps the (tiny, still-warm) entry in DRAM —
-        # the wake-ups were cheap re-confirmations, not missed moves
+            assert s.run_migrations() == []
+        assert s.migration_evals == before
         assert s.entries[hot].tier == "host_dram"
+        # just before the crossing: still asleep; just past it: demoted
+        s.clock.at_least(due - 3600.0)
+        assert s.run_migrations() == []
+        assert s.migration_evals == before
+        s.clock.at_least(due + 3600.0)
+        migs = s.run_migrations()
+        assert [(m.entry_id, m.reason) for m in migs] == [(hot, "demote")]
+        assert s.entries[hot].tier != "host_dram"
+        check_invariants(s)
+
+    def test_drift_migrates_at_exact_crossing_not_band_edge(self):
+        """Within-band drift regression: the break-even crossing can sit
+        strictly INSIDE a log2 frequency band — up to 2x of freq before the
+        band's lower edge.  The re-armed wake-up must be the crossing
+        itself, and the entry must demote there, well before the band
+        boundary where the old schedule first looked."""
+        specs = [TierSpec("host_dram", 1.0), TierSpec("s3", 1.0)]
+        mig = BreakEvenMigrator(compute_cost_per_s=3.6e-9)
+        s = _store(specs, migration=mig)
+        eid, _ = s.put(list(range(8)), _art(0), tier="host_dram")
+        s.clock.advance(3600.0)
+        for _ in range(10):  # freq 10/h: band [8, 16)
+            s.fetch(eid)
+        assert s.run_migrations() == []  # 10/h > f*: stays hot, re-arms
+        e = s.entries[eid]
+        f_star = mig.crossing_freq(s, e)
+        assert 8.0 < f_star < 10.0  # crossing strictly inside the band
+        band_edge_s = e.created_s + 3600.0 * e.uses / 8.0  # = 4500 s
+        crossing_s = e.created_s + 3600.0 * e.uses / f_star  # ~ 3987 s
+        due = s._mig_next[eid]
+        assert due == pytest.approx(crossing_s, rel=1e-9)
+        assert due < band_edge_s
+        # before the crossing: no move ...
+        s.clock.at_least(crossing_s - 50.0)
+        assert s.run_migrations() == []
+        assert s.entries[eid].tier == "host_dram"
+        # ... just past it — still well before the band edge — demoted
+        s.clock.at_least(crossing_s + 50.0)
+        migs = s.run_migrations()
+        assert [(m.entry_id, m.to_tier, m.reason) for m in migs] == [
+            (eid, "s3", "demote")
+        ]
+        assert s.clock.now < band_edge_s
         check_invariants(s)
 
     def test_banded_pass_matches_full_scan_on_many_entries(self):

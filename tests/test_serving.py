@@ -370,3 +370,34 @@ def test_step_event_stream_matches_run():
     drained = list(eng_drain.drain())
     assert [type(e) for e in drained] == [type(e) for e in flat]
     assert eng_drain.idle and not list(eng_drain.drain())
+
+
+def test_on_token_callback_order_matches_decode():
+    """The streaming hook fires once per generated token, in emission order:
+    the callback sequence is exactly the TokenEmitted event stream, and per
+    request it reconstructs the final record's tokens in decode order."""
+    cfg, params = _setup("llama-7b")
+    reqs = _requests(cfg)
+    seen = []
+    eng = ServingEngine(
+        cfg, params,
+        engine_cfg=EngineConfig(max_slots=2, max_len=128, chunk_tokens=16),
+        planner=AlwaysReusePlanner(),
+        on_token=seen.append,
+    )
+    for r in reqs:
+        eng.submit(Request(**r))
+    events = []
+    while not eng.idle:
+        events.extend(eng.step())
+    emitted = [e for e in events if isinstance(e, ev.TokenEmitted)]
+    # the callback saw the exact same event objects, in the same order
+    assert [id(e) for e in seen] == [id(e) for e in emitted]
+    # and per request the callback stream IS the decode order
+    by_req = {}
+    for e in seen:
+        assert e.index == len(by_req.setdefault(e.req_id, []))
+        by_req[e.req_id].append(e.token)
+    assert by_req == {rec.req_id: rec.tokens for rec in eng.records}
+    # off by default: no hook, no callbacks
+    assert ServingEngine(cfg, params).on_token is None
