@@ -1,0 +1,158 @@
+"""CI gate over the serve_bench artifacts: the PR's acceptance criteria,
+asserted on emitted numbers so the perf and accounting claims cannot
+silently rot.
+
+    PYTHONPATH=src python benchmarks/check_snapshot.py
+        [--bench BENCH_serving.json] [--metrics BENCH_serving_metrics.json]
+
+Reads the two files ``benchmarks/serve_bench.py`` writes and checks:
+
+  * speedup floors — burst packed admission >= 2x single, paged decode
+    >= 1.5x dense tokens/s, fused RAG prefill >= 2x full recompute,
+    affinity >= 1.05x round-robin tokens/s;
+  * cluster cache-hit-rate floor — affinity hit rate >= 0.80 (best possible
+    is one cold first-touch per context) and strictly above round-robin;
+  * zero steady-state recompiles — the steady packed lane and the affinity
+    cluster lane compiled nothing during their measured waves (wave-scoped
+    ``jit_misses`` from the bench file), cross-checked against the metrics
+    registry: the packed jit cache's consecutive-hit streak
+    (``jit_calls_since_miss``) covers at least the measured wave's batches;
+  * cost conservation — every telemetry lane's ledger totals match its
+    ``ServingSummary`` at 1e-9 (the residuals serve_bench recorded), ledger
+    category totals are non-negative, compute dollars are attributed (the
+    lanes actually served requests), and the headline ``kv_cache_hit_rate``
+    gauge exists in every lane's registry dump.
+
+Exits non-zero on the first violated check with a self-explanatory message.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ATOL = 1e-9
+
+
+class GateError(AssertionError):
+    pass
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise GateError(msg)
+
+
+def _metric_value(metrics: dict, name: str, **labels) -> float:
+    """One series' value out of a registry snapshot dump."""
+    fam = metrics.get(name)
+    _require(fam is not None, f"metric {name!r} missing from registry dump")
+    for s in fam["series"]:
+        if all(s["labels"].get(k) == str(v) for k, v in labels.items()):
+            return float(s["value"])
+    raise GateError(f"metric {name!r} has no series with labels {labels}")
+
+
+def check_speedups(bench: dict) -> None:
+    sp = bench["speedup"]
+    _require(sp["burst"] >= 2.0,
+             f"burst admission speedup {sp['burst']:.2f}x < 2x")
+    _require(sp["decode_tokens_per_s"] >= 1.5,
+             f"paged decode speedup {sp['decode_tokens_per_s']:.2f}x < 1.5x")
+    _require(sp["rag_prefill"] >= 2.0,
+             f"fused RAG prefill speedup {sp['rag_prefill']:.2f}x < 2x")
+    _require(sp["cluster_tokens_per_s"] >= 1.05,
+             f"affinity tokens/s gain {sp['cluster_tokens_per_s']:.3f}x "
+             f"< 1.05x")
+
+
+def check_cluster_hit_rate(bench: dict) -> None:
+    c = bench["workloads"]["cluster"]
+    aff, rr = c["affinity"], c["round_robin"]
+    # best possible is (n - n_ctx)/n — one cold first-touch per context; the
+    # floor leaves exactly that headroom at the CI-capped 16-request size
+    _require(aff["hit_rate"] >= 0.80,
+             f"affinity hit rate {aff['hit_rate']:.3f} < 0.80")
+    _require(aff["hit_rate"] > rr["hit_rate"],
+             f"affinity hit rate {aff['hit_rate']:.3f} does not beat "
+             f"round-robin {rr['hit_rate']:.3f}")
+
+
+def check_steady_state(bench: dict, lanes: dict) -> None:
+    steady = bench["workloads"]["steady"]["packed"]
+    _require(steady["jit_misses"] == 0,
+             f"steady-state serving kept recompiling: {steady}")
+    aff = bench["workloads"]["cluster"]["affinity"]
+    _require(aff["jit_misses"] == 0,
+             f"cluster steady state kept recompiling: {aff}")
+    # registry cross-check: the packed jit cache's consecutive-hit streak at
+    # collection time must cover the whole measured wave — a single compile
+    # inside the wave would have reset it below the wave's batch count
+    metrics = lanes["steady_packed"]["metrics"]
+    streak = _metric_value(metrics, "jit_calls_since_miss",
+                           replica=0, path="packed")
+    _require(streak >= steady["batches"],
+             f"registry says a jit compile happened inside the steady "
+             f"measured wave (streak {streak:.0f} < {steady['batches']} "
+             f"batches)")
+
+
+def check_conservation(lanes: dict) -> None:
+    for name, lane in lanes.items():
+        _require(lane is not None, f"telemetry lane {name!r} missing")
+        res = lane["conservation_residuals"]
+        # engine lanes: {category: residual}; cluster lanes: {replica: {...}}
+        per_scope = res if all(isinstance(v, dict) for v in res.values()) \
+            else {"engine": res}
+        for scope, rs in per_scope.items():
+            for cat, r in rs.items():
+                _require(r <= ATOL,
+                         f"{name}/{scope}: {cat} conservation residual "
+                         f"{r!r} > {ATOL}")
+        totals = lane["ledger"]["totals"]
+        for cat, dollars in totals.items():
+            _require(dollars >= 0.0, f"{name}: negative {cat} total {dollars}")
+        _require(totals["compute"] > 0.0,
+                 f"{name}: no compute dollars attributed — lane served "
+                 f"nothing?")
+        _require("kv_cache_hit_rate" in lane["metrics"],
+                 f"{name}: headline kv_cache_hit_rate gauge missing")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="BENCH_serving.json")
+    ap.add_argument("--metrics", default="BENCH_serving_metrics.json")
+    args = ap.parse_args()
+
+    bench = json.loads(pathlib.Path(args.bench).read_text())
+    snap = json.loads(pathlib.Path(args.metrics).read_text())
+    _require(snap.get("schema") == 1,
+             f"unknown metrics snapshot schema {snap.get('schema')!r}")
+    lanes = snap["lanes"]
+
+    try:
+        check_speedups(bench)
+        check_cluster_hit_rate(bench)
+        check_steady_state(bench, lanes)
+        check_conservation(lanes)
+    except GateError as e:
+        print(f"check_snapshot: FAIL — {e}", file=sys.stderr)
+        return 1
+
+    sp = bench["speedup"]
+    aff = bench["workloads"]["cluster"]["affinity"]
+    print(
+        f"check_snapshot: OK — burst {sp['burst']:.2f}x, "
+        f"decode {sp['decode_tokens_per_s']:.2f}x, "
+        f"rag {sp['rag_prefill']:.2f}x, "
+        f"affinity hit rate {aff['hit_rate']:.3f}, "
+        f"0 steady recompiles, conservation <= {ATOL} on "
+        f"{len(lanes)} telemetry lanes"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

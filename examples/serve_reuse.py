@@ -23,9 +23,17 @@ tiers over ONE shared s3 core, requests placed by ``--router`` (affinity =
 gossiped-digest cache-affinity routing, round_robin = cache-oblivious
 baseline), ending with the per-replica SLO audit table.
 
+``--telemetry`` attaches a ``Telemetry`` session (repro.obs) to the
+hierarchy run (or the whole cluster) and prints the console dashboard:
+headline cache-hit-rate, latency histograms, the cost ledger's "where did
+the money go" tables, and the conservation check against the summary.
+``--perfetto PATH`` additionally exports the telemetry span trees as
+Chrome trace-event JSON (load it at https://ui.perfetto.dev).
+
     PYTHONPATH=src python examples/serve_reuse.py [--requests 24]
         [--arch llama-7b] [--trace events.jsonl]
         [--replicas 2 --router affinity]
+        [--telemetry] [--perfetto trace.json]
 """
 import argparse
 
@@ -53,7 +61,7 @@ from repro.serving.scheduler import HedgePolicy
 MODES = ("recompute", "paper", "beyond", "hierarchy")
 
 
-def build_engine(cfg, params, mode: str, cost_arch: str):
+def build_engine(cfg, params, mode: str, cost_arch: str, telemetry=None):
     common = dict(max_slots=4, max_len=256, chunk_tokens=16, cost_arch=cost_arch)
     if mode == "recompute":
         ec = EngineConfig(reuse_enabled=False, **common)
@@ -83,7 +91,7 @@ def build_engine(cfg, params, mode: str, cost_arch: str):
         raise ValueError(mode)
     return ServingEngine(
         cfg, params, engine_cfg=ec, planner=CostAwarePlanner(),
-        pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF),
+        pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF), telemetry=telemetry,
     )
 
 
@@ -100,6 +108,11 @@ def run_cluster(cfg, params, reqs, args):
         store_tier="host_dram",
     )
     tracer = trace_mod.TraceWriter(args.trace) if args.trace else None
+    tel = None
+    if args.telemetry or args.perfetto:
+        from repro import obs
+
+        tel = obs.Telemetry()
     cl = ServingCluster(
         cfg, params,
         cluster_cfg=ClusterConfig(
@@ -109,7 +122,7 @@ def run_cluster(cfg, params, reqs, args):
         router=RoundRobinRouter() if args.router == "round_robin" else None,
         planner_factory=CostAwarePlanner,
         pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF),
-        trace=tracer,
+        trace=tracer, telemetry=tel,
     )
     requests = [Request(**r.__dict__) for r in reqs]
     for r in requests:
@@ -133,6 +146,22 @@ def run_cluster(cfg, params, reqs, args):
     print("\nSLO audit (per replica):")
     rows = audit_mod.cluster_audit(cl.events_by_replica, requests)
     print(audit_mod.format_cluster_table(rows))
+    if tel is not None:
+        from repro.obs import console, write_chrome_trace
+
+        tel.collect_cluster(cl)
+        print()
+        print(console.render(tel))
+        residuals = tel.check_cluster(s)
+        worst = max(
+            (r for rs in residuals.values() for r in rs.values()),
+            default=0.0,
+        )
+        print(f"conservation per replica: OK "
+              f"(max residual {worst:.2e} <= 1e-9)")
+        if args.perfetto:
+            p = write_chrome_trace(args.perfetto, tel.spans())
+            print(f"wrote Perfetto trace to {p}")
     if tracer is not None:
         tracer.close()
         print(f"\nwrote {tracer.n_events} events to {tracer.path}")
@@ -149,6 +178,12 @@ def main():
                     help="> 1 serves the workload through a ServingCluster")
     ap.add_argument("--router", choices=("affinity", "round_robin"),
                     default="affinity", help="cluster request placement")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="attach a Telemetry session to the hierarchy run "
+                    "(or the cluster) and print the console dashboard")
+    ap.add_argument("--perfetto", default=None, metavar="PATH",
+                    help="export telemetry span trees as Chrome trace-event "
+                    "JSON (implies --telemetry)")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
@@ -173,8 +208,19 @@ def main():
           f"{'p99 e2e s':>10s} {'storage %':>10s}")
     results = {}
     tracer = trace_mod.TraceWriter(args.trace) if args.trace else None
+    tel = None
+    if args.telemetry or args.perfetto:
+        from repro import obs
+
+        tel = obs.Telemetry()
+    tel_engine = None
     for mode in MODES:
-        eng = build_engine(cfg, params, mode, args.arch)
+        # telemetry rides the hierarchy run only: the mode whose economics
+        # (tiered storage, migration, write-backs) the ledger is about
+        eng = build_engine(cfg, params, mode, args.arch,
+                           telemetry=tel if mode == "hierarchy" else None)
+        if mode == "hierarchy":
+            tel_engine = eng
         requests = [Request(**r.__dict__) for r in reqs]
         for r in requests:
             eng.submit(r)
@@ -207,6 +253,16 @@ def main():
     print("\nSLO audit (hierarchy run):")
     print(audit_mod.format_table(rows))
     print(f"summary: {audit_mod.slo_summary(rows)}")
+
+    if tel is not None:
+        from repro.obs import console, write_chrome_trace
+
+        tel.collect_engine(tel_engine)
+        print()
+        print(console.render(tel, results["hierarchy"][0]))
+        if args.perfetto:
+            p = write_chrome_trace(args.perfetto, tel.spans())
+            print(f"wrote Perfetto trace to {p}")
 
 
 if __name__ == "__main__":

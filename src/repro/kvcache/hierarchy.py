@@ -648,6 +648,7 @@ class TieredStore:
         self._ids = itertools.count()
         self.evictions = 0
         self.rejected_puts = 0
+        self.last_put_handle = None
         # bumped on every trie mutation (put/evict): consumers holding a
         # lookup result (e.g. the engine's prefetch pass) revalidate with it
         # instead of re-walking the trie at admission.
@@ -680,13 +681,19 @@ class TieredStore:
             t.gb_hours += (t.used_bytes / GB) * dt_h
             t._last_accrual_s = now
 
-    def storage_cost(self, pricing: Pricing) -> float:
+    def storage_cost_by_tier(self, pricing: Pricing) -> Dict[str, float]:
+        """Per-tier accrued GB-hour dollars.  ``storage_cost`` is exactly
+        the sum of these, which is what lets the cost ledger settle storage
+        per tier while still satisfying its conservation law."""
         self._accrue()
-        return sum(
-            pricing.tier(t.name).cost_per_gb_hour * t.gb_hours
+        return {
+            t.name: pricing.tier(t.name).cost_per_gb_hour * t.gb_hours
             for t in self.tiers.values()
             if t.name in pricing.tiers
-        )
+        }
+
+    def storage_cost(self, pricing: Pricing) -> float:
+        return sum(self.storage_cost_by_tier(pricing).values())
 
     def storage_rate_per_hour(self) -> float:
         """Instantaneous $/hour the currently resident bytes accrue."""
@@ -777,6 +784,9 @@ class TieredStore:
         if self.migration is not None:
             self._mig_dirty.add(entry_id)
         handle = self._backend_put(e, artifact, tier, nbytes)
+        # surfaced for telemetry: a dedup'd shared-tier put moved zero bytes,
+        # and the ledger records that saving as an explicit zero-$ entry
+        self.last_put_handle = handle
         return entry_id, (handle.delay_s if sync else 0.0)
 
     @staticmethod

@@ -502,6 +502,19 @@ class PagedSlots:
         self.n_blocks[slot] = 0
         self.live[slot] = False
 
+    def stats(self) -> dict:
+        """One consolidated pool-audit snapshot (telemetry gauges read this;
+        ``engine.decode_stats()`` embeds it under the paged path)."""
+        return {
+            "block": self.block,
+            "pool_blocks": self.pool.n_blocks,
+            "pool_blocks_used": self.pool.n_used,
+            "pool_blocks_peak": self.pool_blocks_peak,
+            "shared_block_hits": self.shared_block_hits,
+            "live_slots": int(self.live.sum()),
+            "live_tokens": int(self.lens[self.live].sum()),
+        }
+
     # -- auditing (the hypothesis invariants) --------------------------- #
     def audit(self) -> None:
         """Pool-accounting invariants: ref counts == live table references,

@@ -8,8 +8,9 @@ the modeling surface is one screen of code.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.core.perf_model import PerfModel
 from repro.core.pricing import GB, Pricing
@@ -68,12 +69,48 @@ class TransferStats:
 
 
 class TransferModel:
-    """Load/store delay + $ accounting for each storage tier."""
+    """Load/store delay + $ accounting for each storage tier.
+
+    With a cost ledger bound (``bind_ledger``; telemetry only — None by
+    default and zero-overhead then), every CHARGED movement also writes one
+    attributed fee entry: per-event fees sum to ``transfer_fees()`` within
+    float re-association, which is the transfer leg of the ledger's
+    conservation law (``obs/ledger.py``).  Attribution context (activity /
+    req_id) is a dynamic scope the engine brackets operations with::
+
+        with transfer.attributed(activity="fetch", req_id=7):
+            store.fetch(...)   # any charge inside lands on request 7
+    """
 
     def __init__(self, perf: PerfModel, pricing: Pricing):
         self.perf = perf
         self.pricing = pricing
         self.stats: Dict[str, TransferStats] = {}
+        self.ledger = None  # obs.CostLedger when telemetry is on
+        self._replica = 0
+        self._ctx: Dict[str, object] = {}
+
+    def bind_ledger(self, ledger, *, replica: int = 0) -> None:
+        self.ledger = ledger
+        self._replica = replica
+
+    @contextlib.contextmanager
+    def attributed(self, *, activity: str, req_id: Optional[int] = None):
+        old = self._ctx
+        self._ctx = {"activity": activity, "req_id": req_id}
+        try:
+            yield
+        finally:
+            self._ctx = old
+
+    def _charge(self, tier_name: str, kind: str, nbytes: float) -> None:
+        fee = self.pricing.tier(tier_name).per_gb_transfer_fee * nbytes / GB
+        self.ledger.record_transfer(
+            tier_name, kind, nbytes, fee,
+            activity=str(self._ctx.get("activity", "other")),
+            replica=self._replica,
+            req_id=self._ctx.get("req_id"),
+        )
 
     def _tier_stats(self, tier: str) -> TransferStats:
         return self.stats.setdefault(tier, TransferStats())
@@ -84,6 +121,8 @@ class TransferModel:
         s.loaded_bytes += nbytes
         s.load_events += 1
         s.load_time_s += t
+        if self.ledger is not None:
+            self._charge(tier_name, "load", nbytes)
         return t
 
     def store_delay(self, nbytes: float, tier_name: str) -> float:
@@ -92,6 +131,8 @@ class TransferModel:
         s.stored_bytes += nbytes
         s.store_events += 1
         s.store_time_s += t
+        if self.ledger is not None:
+            self._charge(tier_name, "store", nbytes)
         return t
 
     def estimate_load_delay(self, nbytes: float, tier_name: str) -> float:

@@ -11,6 +11,12 @@ from repro.serving.planner import (  # noqa: F401
     StoreLookup,
 )
 from repro.serving.request import Request  # noqa: F401
+from repro.serving.trace import (  # noqa: F401
+    TraceWriter,
+    read_events,
+    read_tagged_events,
+    read_trace,
+)
 from repro.serving.router import (  # noqa: F401
     AffinityRouter,
     BloomDigest,

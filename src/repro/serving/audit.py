@@ -67,6 +67,28 @@ def audit(
     return sorted(rows, key=lambda r: r.req_id)
 
 
+def audit_from_trace(path, requests: Optional[Iterable[Request]] = None) -> List[AuditRow]:
+    """The same audit rows from a SAVED trace file: replay parity means a
+    trace on disk answers the same SLO questions as the live stream."""
+    from repro.serving.trace import read_events
+
+    return audit(read_events(path), requests)
+
+
+def cluster_audit_from_trace(
+    path, requests: Optional[Iterable[Request]] = None,
+) -> Dict[int, List[AuditRow]]:
+    """Per-replica audit rows from a saved replica-tagged cluster trace."""
+    from repro.serving.trace import read_tagged_events
+
+    tagged = read_tagged_events(path)
+    n = max((rep for rep, _ in tagged), default=-1) + 1
+    streams: List[List[ev.Event]] = [[] for _ in range(n)]
+    for rep, e in tagged:
+        streams[rep].append(e)
+    return cluster_audit(streams, requests)
+
+
 def slo_summary(rows: List[AuditRow]) -> Dict[str, int]:
     met = sum(1 for r in rows if r.slo_met is True)
     violated = sum(1 for r in rows if r.slo_met is False)

@@ -111,10 +111,15 @@ class ServingCluster:
         perf: Optional[PerfModel] = None,
         trace=None,
         on_token=None,
+        telemetry=None,
     ):
         self.cc = cluster_cfg or ClusterConfig()
         self.ec = engine_cfg or EngineConfig()
         self.trace = trace
+        # obs.Telemetry: replica engines feed their own events from step();
+        # the cluster feeds ONLY its cluster-level events (routing/rebalance)
+        # plus gossip ticks, so nothing is double-counted
+        self.telemetry = telemetry
         n = self.cc.n_replicas
         assert n >= 1, n
 
@@ -220,6 +225,8 @@ class ServingCluster:
             clock=clock,
             transfer=transfer,
             on_token=((lambda e, _i=i: on_token(_i, e)) if on_token else None),
+            telemetry=self.telemetry,
+            telemetry_replica=i,
         )
 
     # ------------------------------------------------------------------ #
@@ -340,7 +347,7 @@ class ServingCluster:
         self._route_hits.setdefault(ck, {}).setdefault(d.replica, 0)
         self._route_hits[ck][d.replica] += 1
         self._ctx_tokens[ck] = tuple(req.context_tokens)
-        self._emit(
+        self._emit_cluster(
             d.replica,
             ev.RequestRouted(
                 t_s=req.arrival_s, req_id=req.req_id, replica=d.replica,
@@ -356,6 +363,13 @@ class ServingCluster:
         if self.trace is not None:
             self.trace.write(event, replica=replica)
 
+    def _emit_cluster(self, replica: int, event: ev.Event, out) -> None:
+        """Emit a CLUSTER-originated event (routing/rebalance): engine events
+        reach telemetry from the engine's own step(), these only from here."""
+        self._emit(replica, event, out)
+        if self.telemetry is not None:
+            self.telemetry.on_events([event], replica=replica)
+
     # ------------------------------------------------------------------ #
     # Gossip
     # ------------------------------------------------------------------ #
@@ -370,6 +384,12 @@ class ServingCluster:
             d.update(eng.store.digest_hashes())
             self._digests[i] = d
         self.gossip_ticks += 1
+        if self.telemetry is not None:
+            # digests travel ~bits/8 bytes per live replica, host-side and
+            # unbilled: a zero-dollar ledger entry records the traffic
+            self.telemetry.note_gossip(
+                nbytes=sum(self._alive) * self.cc.digest_bits / 8.0
+            )
 
     # ------------------------------------------------------------------ #
     # Rebalancing (copy-then-keep)
@@ -419,15 +439,16 @@ class ServingCluster:
                 compression.decompress_tree(payload)
                 if d_entry.compressed else payload
             )
-            eid, _ = t_eng.store.put(
-                list(tokens), art,
-                tier=t_eng.store.tier_order[0],
-                saved_per_use=d_entry.saved_per_use,
-            )
+            with t_eng._attr("rebalance"):
+                eid, _ = t_eng.store.put(
+                    list(tokens), art,
+                    tier=t_eng.store.tier_order[0],
+                    saved_per_use=d_entry.saved_per_use,
+                )
             if eid is None:
                 continue
             self.rebalances += 1
-            self._emit(
+            self._emit_cluster(
                 target,
                 ev.ReplicaRebalanced(
                     t_s=now, req_id=-1, content_key=ck,

@@ -32,6 +32,7 @@ bit-comparable to recompute outputs (tests/test_serving.py asserts it).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Dict, Iterator, List, Optional
 
@@ -174,6 +175,8 @@ class ServingEngine:
         clock: Optional[SimClock] = None,
         transfer: Optional[TransferModel] = None,
         on_token=None,
+        telemetry=None,
+        telemetry_replica: int = 0,
     ):
         self.cfg = cfg
         self.params = params
@@ -197,6 +200,15 @@ class ServingEngine:
         # TokenEmitted event, in emission order — first tokens at admission
         # and each decode step's batch in slot order.
         self.on_token = on_token
+        # Unified telemetry (obs.Telemetry), off by default.  Entirely
+        # host-side: it observes the already-materialized event stream and
+        # the transfer model's fee charges, so enabling it cannot change
+        # tokens or trigger recompiles.  ``telemetry_replica`` tags this
+        # engine's events/ledger entries when it serves inside a cluster.
+        self.telemetry = telemetry
+        self._replica = telemetry_replica
+        if telemetry is not None:
+            self.transfer.bind_ledger(telemetry.ledger, replica=telemetry_replica)
         self._c_gpu_s = self.pricing.compute.cost_per_hour / 3600.0
         if self.ec.tier_specs is not None:
             specs = list(self.ec.tier_specs)
@@ -378,6 +390,12 @@ class ServingEngine:
         else jump the clock to the next arrival.  A due migration pass
         (EngineConfig.migration_interval_s) piggybacks on the step and
         surfaces as TierMigrated events."""
+        events = self._step()
+        if self.telemetry is not None and events:
+            self.telemetry.on_events(events, replica=self._replica)
+        return events
+
+    def _step(self) -> List[ev.Event]:
         events: List[ev.Event] = []
         self._run_migrations(events)
         if self._admit_batch(events):
@@ -404,11 +422,22 @@ class ServingEngine:
         return self.summary()
 
     def summary(self) -> metrics_mod.ServingSummary:
+        if self.telemetry is not None:
+            # settle accrued GB-hours into the ledger at the same instant the
+            # summary reads them, so the conservation check is exact
+            self.telemetry.settle_engine(self, replica=self._replica)
         return metrics_mod.summarize(
             self.records,
             storage_cost=self.store.storage_cost(self.pricing),
             transfer_cost=self.transfer.transfer_fees(),
         )
+
+    def _attr(self, activity: str, req_id: Optional[int] = None):
+        """Attribution scope for transfer fees charged inside; a nullcontext
+        when telemetry is off (the common case pays one ``is None``)."""
+        if self.telemetry is None:
+            return contextlib.nullcontext()
+        return self.transfer.attributed(activity=activity, req_id=req_id)
 
     # ------------------------------------------------------------------ #
     # Tier migration (clock-driven economics pass)
@@ -718,9 +747,10 @@ class ServingEngine:
             e = self.store.entries[eid]  # pinned at plan time: must exist
             nbytes = self._entry_fetch_bytes(e, rows)
             override = nbytes if self.cost_cfg is not self.cfg else None
-            art, delay = self.store.fetch(
-                eid, fraction=rows / max(e.n_tokens, 1), nbytes=override
-            )
+            with self._attr("fetch", req.req_id):
+                art, delay = self.store.fetch(
+                    eid, fraction=rows / max(e.n_tokens, 1), nbytes=override
+                )
             sources[eid] = art
             delays.append(delay)
             fetched.append((e.tier, nbytes, delay, rows))
@@ -913,9 +943,10 @@ class ServingEngine:
             # limited backends) is modeled at the same scale as the delay.
             nbytes = self._entry_fetch_bytes(entry, matched)
             override = nbytes
-        artifact, delay = self.store.fetch(
-            entry.entry_id, fraction=matched / entry.n_tokens, nbytes=override
-        )
+        with self._attr("fetch", req.req_id):
+            artifact, delay = self.store.fetch(
+                entry.entry_id, fraction=matched / entry.n_tokens, nbytes=override
+            )
         ready = self._prefetch_ready.pop(req.req_id, None)
         if ready is not None:
             # fetch was issued while earlier requests were being served:
@@ -926,9 +957,20 @@ class ServingEngine:
     def _write_back(self, req: Request, artifact: Any, events: List[ev.Event]) -> None:
         ctx = list(req.context_tokens)
         saved = self._c_gpu_s * self.perf.t_prefill(self.cost_cfg, len(ctx))
-        entry_id, _ = self.store.put(
-            ctx, artifact, tier=self._store_tier(), saved_per_use=saved
-        )
+        with self._attr("write_back", req.req_id):
+            entry_id, _ = self.store.put(
+                ctx, artifact, tier=self._store_tier(), saved_per_use=saved
+            )
+        h = self.store.last_put_handle if entry_id is not None else None
+        if self.telemetry is not None and h is not None and h.dedup:
+            # a content-addressed shared tier already held these bytes: no
+            # upload happened, no fee accrued — record the dedup'd write-back
+            # as an explicit zero-$ entry so the saving is visible per request
+            self.telemetry.ledger.add(
+                "transfer", "write_back_dedup", 0.0,
+                replica=self._replica, req_id=req.req_id,
+                tier=h.tier, nbytes=0.0, kind="store",
+            )
         # capacity-pressure spills triggered by this put surface now, at
         # their own timestamp, not at the next step's drain
         self._emit_migrations(events)
@@ -1161,13 +1203,8 @@ class ServingEngine:
             "decode_tokens": self.decode_tokens,
         }
         if self._paged_on:
-            out.update(
-                kv_block=self.ec.kv_block,
-                pool_blocks=self._paged.pool.n_blocks,
-                pool_blocks_used=self._paged.pool.n_used,
-                pool_blocks_peak=self._paged.pool_blocks_peak,
-                shared_block_hits=self._paged.shared_block_hits,
-            )
+            ps = self._paged.stats()
+            out.update(kv_block=ps.pop("block"), **ps)
         return out
 
     def fused_stats(self) -> Dict[str, Any]:

@@ -52,3 +52,8 @@ class JitBucketStats:
             "hit_rate": self.hits / max(self.hits + self.misses, 1),
             "calls_since_miss": self.calls_since_miss,
         }
+
+    def labeled_calls(self) -> Dict[str, int]:
+        """``calls`` with metric-label-friendly "QxK" bucket keys — the shape
+        the telemetry registry exports (``jit_bucket_calls{bucket="QxK"}``)."""
+        return {f"{q}x{k}": n for (q, k), n in self.calls.items()}

@@ -44,8 +44,10 @@ def summarize(
     storage_cost: float,
     transfer_cost: float,
 ) -> ServingSummary:
-    ttft = np.array([r.ttft_s for r in records]) if records else np.zeros(1)
-    e2e = np.array([r.e2e_s for r in records]) if records else np.zeros(1)
+    # empty runs report NaN latency stats, never a fake 0.0: a consumer
+    # averaging summaries must not mistake "no requests" for "instant TTFT"
+    ttft = np.array([r.ttft_s for r in records]) if records else np.full(1, np.nan)
+    e2e = np.array([r.e2e_s for r in records]) if records else np.full(1, np.nan)
     return ServingSummary(
         n_requests=len(records),
         reuse_hits=sum(
@@ -98,8 +100,13 @@ class ClusterSummary:
 
     @property
     def mean_ttft_s(self) -> float:
+        # idle replicas (0 requests) report NaN stats; they carry no weight
+        # here and must not poison the cluster mean
         n = max(self.n_requests, 1)
-        return sum(s.mean_ttft_s * s.n_requests for s in self.replicas) / n
+        return sum(
+            s.mean_ttft_s * s.n_requests for s in self.replicas
+            if s.n_requests > 0
+        ) / n
 
     def as_dict(self) -> Dict[str, float]:
         return {

@@ -161,6 +161,7 @@ class RoundRobinRouter:
 
     def __init__(self):
         self._count = itertools.count()
+        self.decisions = 0
 
     def configure(self, **_) -> None:
         pass
@@ -168,12 +169,16 @@ class RoundRobinRouter:
     def decide(self, req, views: Sequence[ReplicaView]) -> RouteDecision:
         cands = _qualifying(views)
         v = cands[next(self._count) % len(cands)]
+        self.decisions += 1
         return RouteDecision(
             replica=v.replica, matched_tokens=0, score=0.0, ring_owner=-1
         )
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
         return self.decide(req, views).replica
+
+    def stats(self) -> dict:
+        return {"decisions": self.decisions}
 
 
 @dataclasses.dataclass
@@ -202,6 +207,11 @@ class AffinityRouter:
         self.perf = None
         self.chunk_tokens = 256
         self.compression = 1.0
+        # decision audit (telemetry absorbs these): how often the digest
+        # predicted overlap, and how often the pick was just the ring owner
+        self.decisions = 0
+        self.predicted_hits = 0
+        self.ring_agreements = 0
 
     def configure(
         self, *, cost_cfg, pricing, perf, chunk_tokens: int,
@@ -269,6 +279,9 @@ class AffinityRouter:
             ),
         )
         score, matched = self._score(req, w, best)
+        self.decisions += 1
+        self.predicted_hits += 1 if matched > 0 else 0
+        self.ring_agreements += 1 if best.replica == owner else 0
         return RouteDecision(
             replica=best.replica, matched_tokens=matched,
             score=score, ring_owner=owner,
@@ -276,3 +289,10 @@ class AffinityRouter:
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
         return self.decide(req, views).replica
+
+    def stats(self) -> dict:
+        return {
+            "decisions": self.decisions,
+            "predicted_hits": self.predicted_hits,
+            "ring_agreements": self.ring_agreements,
+        }

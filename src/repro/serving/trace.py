@@ -9,20 +9,36 @@ interrupted run still leaves a readable trace.  Each line is::
 (``RequestFinished`` lines therefore embed the full ``RequestRecord``
 including its executed ``ReusePlan``/``FusedSchedule``).  Extra key/values
 passed to ``write``/``write_all`` are merged into every line (e.g. a
-``mode`` tag when several engine runs share one file).
+``mode`` tag when several engine runs share one file, or the ``replica``
+tag ``ServingCluster`` writes).
 
-Any consumer that kept only the trace file can rebuild the same views the
-in-process stream supports: ``read_trace`` parses it back into dicts, and
-``serving.audit`` / ``serving.metrics.summarize_events`` keep working on the
-live objects.  ``examples/serve_reuse.py --trace PATH`` wires this exporter
-into the end-to-end driver.
+A fresh file starts with one schema header line::
+
+    {"__trace__": {"version": 1, "format": "repro.serving.events"}}
+
+so consumers can detect the schema; ``read_trace`` tolerates it (header
+lines never appear among the returned events — the parsed header rides on
+the result's ``.header`` attribute).  Non-JSON-native leaves (numpy/jax
+scalars and arrays) serialize deterministically as their Python values
+instead of crashing mid-run or degrading to ``repr`` strings.
+
+The trace is self-sufficient: ``read_events`` rebuilds TYPED events —
+nested plans, fused schedules and records included — whose
+``summarize_events`` / ``audit`` / span-tree views match the live stream
+exactly (tests/test_obs.py), and ``read_tagged_events`` recovers a
+cluster's replica-tagged stream.  ``examples/serve_reuse.py --trace PATH``
+wires this exporter into the end-to-end driver.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import pathlib
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+TRACE_FORMAT = "repro.serving.events"
+TRACE_VERSION = 1
+_HEADER_KEY = "__trace__"
 
 
 def event_to_dict(event: Any, **extra: Any) -> Dict[str, Any]:
@@ -32,6 +48,31 @@ def event_to_dict(event: Any, **extra: Any) -> Dict[str, Any]:
     out.update(dataclasses.asdict(event))
     out.update(extra)
     return out
+
+
+def _json_default(o: Any) -> Any:
+    """Deterministic serialization for non-JSON-native leaves: numpy/jax
+    scalars become their Python values, arrays become nested lists, bytes
+    hex-encode.  Anything else falls back to ``str`` (never crashes the
+    run mid-trace)."""
+    import numpy as np
+
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.bool_):
+        return bool(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    if isinstance(o, (bytes, bytearray)):
+        return o.hex()
+    if hasattr(o, "__jax_array__") or type(o).__module__.startswith("jax"):
+        try:
+            return np.asarray(o).tolist()
+        except Exception:
+            pass
+    return str(o)
 
 
 class TraceWriter:
@@ -44,17 +85,24 @@ class TraceWriter:
                 tw.write(event)
 
     Lines flush per event (live tailing works); ``n_events`` counts what was
-    written.  Non-JSON-native leaves (numpy scalars, jax arrays) degrade to
-    ``str`` rather than failing the run.
-    """
+    written.  A schema header line is emitted when the file starts empty
+    (append mode onto an existing trace inherits its header)."""
 
     def __init__(self, path, *, append: bool = False):
         self.path = pathlib.Path(path)
+        fresh = not (append and self.path.exists() and self.path.stat().st_size)
         self._f = open(self.path, "a" if append else "w")
         self.n_events = 0
+        if fresh:
+            json.dump(
+                {_HEADER_KEY: {"version": TRACE_VERSION, "format": TRACE_FORMAT}},
+                self._f,
+            )
+            self._f.write("\n")
+            self._f.flush()
 
     def write(self, event: Any, **extra: Any) -> None:
-        json.dump(event_to_dict(event, **extra), self._f, default=str)
+        json.dump(event_to_dict(event, **extra), self._f, default=_json_default)
         self._f.write("\n")
         self._f.flush()
         self.n_events += 1
@@ -78,11 +126,130 @@ class TraceWriter:
         return None
 
 
-def read_trace(path) -> List[Dict[str, Any]]:
-    """Parse a JSONL trace back into event dicts (blank lines skipped)."""
-    out: List[Dict[str, Any]] = []
+class Trace(List[Dict[str, Any]]):
+    """``read_trace``'s result: a plain list of event dicts, with the parsed
+    schema header (or None for headerless/legacy traces) as ``.header``."""
+
+    header: Optional[Dict[str, Any]] = None
+
+
+def read_trace(path) -> Trace:
+    """Parse a JSONL trace back into event dicts (blank lines skipped).
+    Header lines are tolerated and returned via the result's ``.header``
+    attribute, never as events."""
+    out = Trace()
     for line in pathlib.Path(path).read_text().splitlines():
         line = line.strip()
-        if line:
-            out.append(json.loads(line))
+        if not line:
+            continue
+        d = json.loads(line)
+        if _HEADER_KEY in d:
+            out.header = d[_HEADER_KEY]
+        else:
+            out.append(d)
     return out
+
+
+# --------------------------------------------------------------------------- #
+# Replay: trace dicts -> typed events
+# --------------------------------------------------------------------------- #
+def _fused_span(d: Dict[str, Any]):
+    from repro.kvcache.fusion import FusedSpan
+
+    return FusedSpan(
+        start=d["start"], end=d["end"], kind=d["kind"],
+        entry_id=d["entry_id"], src_start=d["src_start"],
+        chunk_hashes=tuple(d["chunk_hashes"]),
+    )
+
+
+def _fused_schedule(d: Optional[Dict[str, Any]]):
+    if d is None:
+        return None
+    from repro.kvcache.fusion import CompositeMatch, FusedSchedule
+
+    m = d["match"]
+    match = CompositeMatch(
+        spans=tuple(_fused_span(s) for s in m["spans"]),
+        total_tokens=m["total_tokens"],
+        chunk_tokens=m["chunk_tokens"],
+    )
+    return FusedSchedule(
+        match=match,
+        recompute_frac=d["recompute_frac"],
+        spans=tuple(_fused_span(s) for s in d["spans"]),
+        reused_tokens=d["reused_tokens"],
+        recompute_tokens=d["recompute_tokens"],
+    )
+
+
+def _plan(d: Optional[Dict[str, Any]]):
+    if d is None:
+        return None
+    from repro.serving.planner import ReusePlan
+
+    return ReusePlan(
+        action=d["action"], tier=d["tier"],
+        matched_tokens=d["matched_tokens"],
+        reused_fraction=d["reused_fraction"],
+        fetch_bytes=d["fetch_bytes"], store_after=d["store_after"],
+        est_ttft_s=d["est_ttft_s"], est_cost=d["est_cost"],
+        fused=_fused_schedule(d.get("fused")),
+    )
+
+
+def _record(d: Dict[str, Any]):
+    from repro.serving.request import RequestRecord
+
+    return RequestRecord(
+        req_id=d["req_id"], arrival_s=d["arrival_s"],
+        context_len=d["context_len"], prompt_len=d["prompt_len"],
+        tokens=list(d["tokens"]), action=d["action"],
+        matched_tokens=d["matched_tokens"], plan=_plan(d.get("plan")),
+        start_s=d["start_s"], load_s=d["load_s"],
+        prefill_s=d["prefill_s"], decode_s=d["decode_s"],
+        finish_s=d["finish_s"], compute_cost=d["compute_cost"],
+    )
+
+
+def event_from_dict(d: Dict[str, Any]):
+    """One trace line back into its typed event (extra tags — ``mode``,
+    ``replica`` — are ignored; nested plans/records/schedules rebuild as
+    the original dataclasses, tuples restored)."""
+    from repro.serving import events as ev
+
+    cls = getattr(ev, d["event"], None)
+    if cls is None or not dataclasses.is_dataclass(cls):
+        raise ValueError(f"unknown event class in trace: {d['event']!r}")
+    kw: Dict[str, Any] = {}
+    for f in dataclasses.fields(cls):
+        v = d[f.name]
+        if f.name == "plan":
+            v = _plan(v)
+        elif f.name == "record":
+            v = _record(v)
+        elif f.name == "req_ids":
+            v = tuple(v)
+        kw[f.name] = v
+    return cls(**kw)
+
+
+def events_from_dicts(dicts: Iterable[Dict[str, Any]]) -> List[Any]:
+    return [event_from_dict(d) for d in dicts]
+
+
+def read_events(path) -> List[Any]:
+    """Typed event stream from a saved trace — the replay entry point:
+    ``summarize_events``/``audit``/``obs.build_spans`` over the result
+    match the live stream exactly."""
+    return events_from_dicts(read_trace(path))
+
+
+def read_tagged_events(path) -> List[Tuple[int, Any]]:
+    """Replica-tagged typed events from a cluster trace (lines carry the
+    ``replica`` extra ``ServingCluster`` writes; untagged lines land on
+    replica 0) — feeds ``obs.build_cluster_spans`` and
+    ``audit.cluster_audit`` the same shapes the live cluster produces."""
+    return [
+        (int(d.get("replica", 0)), event_from_dict(d)) for d in read_trace(path)
+    ]
