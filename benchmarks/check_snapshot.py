@@ -21,7 +21,13 @@ Reads the two files ``benchmarks/serve_bench.py`` writes and checks:
     ``ServingSummary`` at 1e-9 (the residuals serve_bench recorded), ledger
     category totals are non-negative, compute dollars are attributed (the
     lanes actually served requests), and the headline ``kv_cache_hit_rate``
-    gauge exists in every lane's registry dump.
+    gauge exists in every lane's registry dump;
+  * fault tolerance — the chaos lane's seeded schedule actually fired
+    (injected fetch failures, a replica crash), degradation to recompute
+    happened (rate > 0) with retries observed, every request finished
+    token-identical to the fault-free run, the faulted pass cost no more
+    than the configured inflation ceiling, and it too compiled nothing
+    during the measured wave.
 
 Exits non-zero on the first violated check with a self-explanatory message.
 """
@@ -120,6 +126,32 @@ def check_conservation(lanes: dict) -> None:
                  f"{name}: headline kv_cache_hit_rate gauge missing")
 
 
+def check_chaos(bench: dict, lanes: dict) -> None:
+    h = bench["workloads"]["chaos"]
+    _require(h["token_identity"] is True,
+             "chaos lane generated different tokens than the fault-free run")
+    _require(h["injector"]["injected_failures"] > 0,
+             f"chaos schedule injected no failures: {h['injector']}")
+    _require(h["fetch_retries"] > 0,
+             f"no fetch was ever retried under faults: {h}")
+    _require(h["degraded_requests"] > 0 and h["degradation_rate"] > 0.0,
+             f"no request degraded to recompute under faults: {h}")
+    _require(h["replica_crashes"] >= 1,
+             f"the scheduled mid-run replica crash never fired: {h}")
+    _require(h["cost_inflation"] <= h["cost_ceiling"],
+             f"graceful degradation cost x{h['cost_inflation']:.2f} exceeds "
+             f"the x{h['cost_ceiling']:.1f} ceiling")
+    _require(h["jit_misses"] == 0,
+             f"fault handling caused steady-state recompiles: {h}")
+    # wasted transfer must be accounted, not vanish: the failed attempts'
+    # bytes show up as zero-dollar "fetch_failed" marker entries, so the
+    # per-replica fault counters carry nonzero wasted bytes
+    wasted = sum(fs["fetch_wasted_bytes"]
+                 for fs in lanes["chaos"]["fault_stats"])
+    _require(wasted > 0.0,
+             "injected failures burned no accounted transfer bytes")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bench", default="BENCH_serving.json")
@@ -137,19 +169,23 @@ def main() -> int:
         check_cluster_hit_rate(bench)
         check_steady_state(bench, lanes)
         check_conservation(lanes)
+        check_chaos(bench, lanes)
     except GateError as e:
         print(f"check_snapshot: FAIL — {e}", file=sys.stderr)
         return 1
 
     sp = bench["speedup"]
     aff = bench["workloads"]["cluster"]["affinity"]
+    h = bench["workloads"]["chaos"]
     print(
         f"check_snapshot: OK — burst {sp['burst']:.2f}x, "
         f"decode {sp['decode_tokens_per_s']:.2f}x, "
         f"rag {sp['rag_prefill']:.2f}x, "
         f"affinity hit rate {aff['hit_rate']:.3f}, "
         f"0 steady recompiles, conservation <= {ATOL} on "
-        f"{len(lanes)} telemetry lanes"
+        f"{len(lanes)} telemetry lanes, chaos token-identical "
+        f"({h['degraded_requests']} degraded, "
+        f"cost x{h['cost_inflation']:.2f} <= x{h['cost_ceiling']:.1f})"
     )
     return 0
 

@@ -475,6 +475,159 @@ def _serve_cluster(cfg, params, *, n, replicas, cost_arch, affinity, seed,
     return out, lane, tel, {r.req_id: r.tokens for r in records}
 
 
+# Chaos lane knobs.  Per-op rates sit well above the 5% acceptance floor so
+# the seeded schedule reliably exercises every failure path at bench size;
+# max_attempts=2 keeps retry-exhaustion (the degradation path) observable
+# without needing three consecutive bad draws on one key.  The inflation
+# ceiling bounds what graceful degradation may cost vs the fault-free run.
+CHAOS_FAIL_RATE = 0.4
+CHAOS_CORRUPT_RATE = 0.2
+CHAOS_COST_CEILING = 2.5
+CHAOS_CRASH_AT = 1.1  # s after the measured wave opens: mid-flight
+CHAOS_INJ_SEED = 29  # injector seed offset: fixes WHICH ops fail
+
+
+def _serve_chaos(cfg, params, *, n, replicas, cost_arch, seed):
+    """Fault-tolerance lane: the SAME skewed cluster workload twice — once
+    fault-free, once under a seeded schedule (transient fetch failures,
+    in-flight corruption, a host_dram brownout window, one mid-wave replica
+    crash) — producing the comparisons the CI gate asserts: bitwise token
+    identity, bounded cost inflation, observed retries/degradations, a
+    fired crash, per-replica ledger conservation, zero steady-state
+    recompiles.
+
+    Both passes run ``admit_batch=1``: a crash resubmission burst must not
+    invent new packed-shape jit buckets mid-measurement, and per-request
+    admission makes the clean pass a true cost baseline.  The injector is
+    built unarmed and armed only after the warm wave, so every bucket
+    compiles fault-free and measured-wave degradations reuse hot kernels."""
+    import jax  # noqa: F401
+
+    from repro.core.perf_model import PerfModel, V100_X4_HF
+    from repro.core.pricing import AWS_PAPER
+    from repro.kvcache.faults import FaultInjector, RetryPolicy
+    from repro.kvcache.hierarchy import TierSpec
+    from repro.obs import Telemetry
+    from repro.serving import (
+        AlwaysReusePlanner,
+        ClusterConfig,
+        EngineConfig,
+        Request,
+        ServingCluster,
+    )
+    from repro.serving import events as ev
+
+    def one_pass(faults):
+        tel = Telemetry()
+        ec = EngineConfig(
+            max_slots=4, max_len=256, chunk_tokens=16, cost_arch=cost_arch,
+            tier_specs=[
+                TierSpec("host_dram", 1.0),
+                TierSpec("local_nvme", 1.0),
+                TierSpec("s3", 1.0),
+            ],
+            store_tier="host_dram",
+            admit_batch=1,
+            faults=faults,
+            retry_policy=RetryPolicy(max_attempts=2),
+        )
+        cl = ServingCluster(
+            cfg, params,
+            cluster_cfg=ClusterConfig(n_replicas=replicas,
+                                      gossip_interval_s=0.05),
+            engine_cfg=ec, planner_factory=AlwaysReusePlanner,
+            pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF), telemetry=tel,
+        )
+        warm = _requests(
+            cfg, n=4, n_ctx=2, ctx_len=CLUSTER_CTX_LEN,
+            prompt_len=CLUSTER_PROMPT, new=CLUSTER_NEW,
+            arrivals=[0.3 * i for i in range(4)],
+            seed=seed + 7, ctx_seed=seed + 900,
+        )
+        for eng in cl.replicas:
+            for r in warm:
+                eng.submit(Request(**r))
+            eng.run()
+
+        warm_jit = [dict(e.packed_stats()["jit"]) for e in cl.replicas]
+        n_warm = [len(e.records) for e in cl.replicas]
+        warm_cost = sum(e.summary().total_cost for e in cl.replicas)
+        t0 = max(e.clock.now for e in cl.replicas)
+
+        if faults is not None:
+            faults.arm(fail_rate={"*": CHAOS_FAIL_RATE},
+                       corrupt_rate={"*": CHAOS_CORRUPT_RATE})
+            faults.add_brownout("host_dram", t0 + 1.6, t0 + 2.0)
+            faults.schedule_crash(1, t0 + CHAOS_CRASH_AT)
+
+        n_ctx = next(k for k in range(3, 3 + replicas + 1) if k % replicas)
+        reqs = _requests(
+            cfg, n=n, n_ctx=n_ctx, ctx_len=CLUSTER_CTX_LEN,
+            prompt_len=CLUSTER_PROMPT, new=CLUSTER_NEW,
+            arrivals=[0.2 * i for i in range(n)],
+            seed=seed + 1, ctx_seed=seed + 100,
+        )
+        for r in reqs:
+            cl.submit(Request(**{**r, "arrival_s": r["arrival_s"] + t0}))
+        csum = cl.run()
+
+        records = [
+            r for e, k in zip(cl.replicas, n_warm) for r in e.records[k:]
+        ]
+        jit_misses = sum(
+            e.packed_stats()["jit"]["misses"] - w["misses"]
+            for e, w in zip(cl.replicas, warm_jit)
+        )
+        # measured-wave spend only: the warm wave is identical across the
+        # two passes, so it would dilute the inflation ratio, not inform it
+        cost = csum.total_cost - warm_cost
+        return cl, csum, tel, records, jit_misses, cost
+
+    _, _, _, rec0, jit0, cost0 = one_pass(None)
+    inj = FaultInjector(seed=seed + CHAOS_INJ_SEED)
+    cl1, csum1, tel, rec1, jit1, cost1 = one_pass(inj)
+
+    tok0 = {r.req_id: r.tokens for r in rec0}
+    tok1 = {r.req_id: r.tokens for r in rec1}
+    identical = tok1 == tok0
+    assert identical, "chaos-run tokens diverged from the fault-free run"
+
+    evs = [e for _, e in cl1.events]
+    n_failed = sum(isinstance(e, ev.FetchFailed) for e in evs)
+    n_retried = sum(isinstance(e, ev.FetchRetried) for e in evs)
+    n_degraded = sum(isinstance(e, ev.DegradedToRecompute) for e in evs)
+    n_crashes = sum(isinstance(e, ev.ReplicaCrashed) for e in evs)
+
+    tel.collect_cluster(cl1)
+    residuals = {str(i): r for i, r in tel.check_cluster(csum1).items()}
+
+    out = {
+        "n_requests": len(rec1),
+        "n_replicas": replicas,
+        "fail_rate": CHAOS_FAIL_RATE,
+        "corrupt_rate": CHAOS_CORRUPT_RATE,
+        "token_identity": bool(identical),
+        "fetch_failures": n_failed,
+        "fetch_retries": n_retried,
+        "degraded_requests": n_degraded,
+        "degradation_rate": n_degraded / max(len(rec1), 1),
+        "replica_crashes": n_crashes,
+        "injector": inj.stats(),
+        # dollars on re-issued fetch attempts, separable by construction
+        # (the retry loop brackets them with the "fetch_retry" activity)
+        "retry_dollars": tel.ledger.by_activity().get("fetch_retry", 0.0),
+        "clean_cost": cost0,
+        "faulted_cost": cost1,
+        "cost_inflation": cost1 / max(cost0, 1e-12),
+        "cost_ceiling": CHAOS_COST_CEILING,
+        "jit_misses_clean": jit0,
+        "jit_misses": jit1,
+    }
+    lane = _telemetry_lane(tel, residuals)
+    lane["fault_stats"] = [e.fault_stats() for e in cl1.replicas]
+    return out, lane, {r.req_id: r.tokens for r in rec1}
+
+
 def run(
     n_burst: int = 24,
     n_steady: int = 24,
@@ -487,6 +640,7 @@ def run(
     n_rag: int = 16,
     n_cluster: int = 24,
     cluster_replicas: int = 2,
+    n_chaos: int = 16,
 ) -> Dict:
     import jax
 
@@ -596,6 +750,14 @@ def run(
     results["speedup"]["cluster_tokens_per_s"] = (
         clu_a["tokens_per_busy_s"] / max(clu_r["tokens_per_busy_s"], 1e-12)
     )
+    # chaos phase: the same cluster workload under a seeded fault schedule
+    # must finish every request token-identical at bounded extra cost
+    chaos, tel_lane, _ = _serve_chaos(
+        cfg, params, n=n_chaos, replicas=cluster_replicas,
+        cost_arch=cost_arch, seed=seed,
+    )
+    results["workloads"]["chaos"] = chaos
+    telemetry["chaos"] = tel_lane
 
     results["config"] = {
         "arch": arch, "cost_arch": cost_arch, "slots": slots,
@@ -606,6 +768,9 @@ def run(
         "rag_ctx_chunks": RAG_CTX_CHUNKS, "rag_pool": RAG_POOL,
         "n_cluster": n_cluster, "cluster_replicas": cluster_replicas,
         "cluster_ctx_len": CLUSTER_CTX_LEN,
+        "n_chaos": n_chaos, "chaos_fail_rate": CHAOS_FAIL_RATE,
+        "chaos_corrupt_rate": CHAOS_CORRUPT_RATE,
+        "chaos_cost_ceiling": CHAOS_COST_CEILING,
     }
     # the affinity lane's span trees, for the optional Perfetto export (the
     # docs/OBSERVABILITY.md walkthrough reads exactly this trace)
@@ -626,6 +791,9 @@ def main() -> List[str]:
     ap.add_argument("--cluster-requests", type=int, default=24,
                     help="cluster workload size (measured wave)")
     ap.add_argument("--cluster-replicas", type=int, default=2)
+    ap.add_argument("--chaos-requests", type=int, default=16,
+                    help="fault-injection lane size (measured wave, run "
+                    "twice: clean and faulted)")
     ap.add_argument("--arch", default="llama-7b")
     ap.add_argument("--cost-arch", default="llama-7b")
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -644,6 +812,7 @@ def main() -> List[str]:
         n_rag=args.rag_requests,
         n_cluster=args.cluster_requests,
         cluster_replicas=args.cluster_replicas,
+        n_chaos=args.chaos_requests,
     )
     pathlib.Path(args.out).write_text(json.dumps(res, indent=2))
     snap = {
@@ -660,7 +829,7 @@ def main() -> List[str]:
 
     lines = []
     for name, modes in res["workloads"].items():
-        if name in ("decode", "rag", "cluster"):
+        if name in ("decode", "rag", "cluster", "chaos"):
             continue
         p, s = modes["packed"], modes["single"]
         lines.append(
@@ -695,6 +864,17 @@ def main() -> List[str]:
         f"({c['round_robin']['tokens_per_busy_s']:.1f} tok/s) "
         f"-> {res['speedup']['cluster_hit_rate']:.2f}x hits, "
         f"{res['speedup']['cluster_tokens_per_s']:.2f}x tok/s"
+    )
+    h = res["workloads"]["chaos"]
+    lines.append(
+        f"chaos: tokens identical={h['token_identity']} under "
+        f"{h['fetch_failures']} injected fetch failures "
+        f"({h['fetch_retries']} retried, {h['degraded_requests']} degraded "
+        f"to recompute, {h['replica_crashes']} replica crash) -> "
+        f"cost x{h['cost_inflation']:.2f} vs clean "
+        f"(ceiling x{h['cost_ceiling']:.1f}), "
+        f"retry spend ${h['retry_dollars']:.6f}, "
+        f"{h['jit_misses']} steady-state recompiles"
     )
     for lane, snap_lane in telemetry.items():
         led = snap_lane["ledger"]

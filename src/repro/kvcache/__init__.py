@@ -1,6 +1,17 @@
 """Tiered, content-addressed KV/context-state cache (the paper's storage half)."""
 from repro.kvcache import (  # noqa: F401
-    backend, chunks, compression, hierarchy, paged, store, transfer,
+    backend, chunks, compression, faults, hierarchy, paged, store, transfer,
+)
+from repro.kvcache.faults import (  # noqa: F401
+    Brownout,
+    CorruptPayload,
+    CrashPlan,
+    FaultInjector,
+    KeyNotFound,
+    RetryPolicy,
+    StorageError,
+    TierUnavailable,
+    payload_checksum,
 )
 from repro.kvcache.backend import (  # noqa: F401
     HostMemoryBackend,

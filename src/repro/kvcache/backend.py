@@ -23,6 +23,13 @@ from __future__ import annotations
 
 from typing import Any, Dict, Optional, Protocol, Tuple, runtime_checkable
 
+from repro.kvcache.faults import (
+    CorruptPayload,
+    FaultInjector,
+    KeyNotFound,
+    TierUnavailable,
+    payload_checksum,
+)
 from repro.kvcache.transfer import SimClock, TransferHandle, TransferModel
 
 
@@ -80,12 +87,15 @@ class _MemoryBackend:
         transfer: Optional[TransferModel] = None,
         clock: Optional[SimClock] = None,
         hedge: Optional["HedgePolicy"] = None,
+        faults: Optional[FaultInjector] = None,
     ):
         self.name = name
         self.transfer = transfer
         self.clock = clock or SimClock()
         self.hedge = hedge
+        self.faults = faults
         self._data: Dict[str, Tuple[Any, float]] = {}
+        self._checksums: Dict[str, str] = {}
 
     # -- storage primitives (override to move bytes elsewhere) ----------- #
     def _write(self, key: str, payload: Any, nbytes: float) -> None:
@@ -95,9 +105,10 @@ class _MemoryBackend:
         try:
             return self._data[key]
         except KeyError:
-            raise KeyError(
+            raise KeyNotFound(
                 f"{type(self).__name__} tier {self.name!r} has no payload "
-                f"under key {key!r}"
+                f"under key {key!r}",
+                tier=self.name, key=key, reason="not_found",
             ) from None
 
     def _drop(self, key: str) -> bool:
@@ -115,6 +126,10 @@ class _MemoryBackend:
                 f"nbytes must be >= 0, got {nbytes!r} "
                 f"(tier {self.name!r}, key {key!r})"
             )
+        self._check_brownout(key)
+        # stamp the content checksum before the bytes land so get() can
+        # verify corruption is detected, never served
+        self._checksums[key] = payload_checksum(payload)
         self._write(key, payload, nbytes)
         delay = 0.0
         if self.transfer is not None and charge:
@@ -127,6 +142,7 @@ class _MemoryBackend:
     def get(
         self, key: str, *, nbytes: Optional[float] = None, charge: bool = True
     ) -> Tuple[Any, TransferHandle]:
+        self._check_brownout(key)
         payload, stored_nbytes = self._read(key)
         n = stored_nbytes if nbytes is None else nbytes
         delay = 0.0
@@ -137,6 +153,22 @@ class _MemoryBackend:
                 else self.transfer.estimate_load_delay(n, self.name)
             ) + self.link_overhead_s
         delay = self._hedged(delay)
+        # injected transient faults fire *after* the transfer was charged:
+        # the wasted bytes and delay are real dollars the failure burned
+        if self.faults is not None and self.faults.should_fail(self.name, key):
+            raise TierUnavailable(
+                f"tier {self.name!r} dropped fetch of {key!r} (injected)",
+                tier=self.name, key=key, delay_s=delay, wasted_bytes=n,
+                reason="unavailable",
+            )
+        if self.faults is not None and self.faults.should_corrupt(self.name, key):
+            raise CorruptPayload(
+                f"tier {self.name!r} served corrupt bytes for {key!r} "
+                f"(injected in-flight corruption)",
+                tier=self.name, key=key, delay_s=delay, wasted_bytes=n,
+                reason="corrupt", at_rest=False,
+            )
+        self._verify(key, payload, delay_s=delay, nbytes=n)
         handle = TransferHandle(
             key=key, tier=self.name, kind="load", nbytes=n,
             delay_s=delay, issued_at_s=self.clock.now,
@@ -144,6 +176,7 @@ class _MemoryBackend:
         return payload, handle
 
     def delete(self, key: str) -> bool:
+        self._checksums.pop(key, None)
         return self._drop(key)
 
     def contains(self, key: str) -> bool:
@@ -161,6 +194,31 @@ class _MemoryBackend:
         )
 
     # -- internals ------------------------------------------------------ #
+    def _check_brownout(self, key: str) -> None:
+        """Fail fast (uncharged — no bytes ever moved) while this tier is
+        inside an injected brownout window."""
+        if self.faults is not None and self.faults.browned_out(
+            self.name, self.clock.now
+        ):
+            raise TierUnavailable(
+                f"tier {self.name!r} is browned out at t={self.clock.now:.3f}s "
+                f"(key {key!r})",
+                tier=self.name, key=key, reason="brownout",
+            )
+
+    def _verify(self, key: str, payload: Any, *, delay_s: float,
+                nbytes: float) -> None:
+        """Compare the served payload against the checksum stamped at put
+        time; a mismatch means the stored copy itself rotted (at rest)."""
+        want = self._checksums.get(key)
+        if want is not None and payload_checksum(payload) != want:
+            raise CorruptPayload(
+                f"tier {self.name!r} checksum mismatch for {key!r}: stored "
+                f"copy is corrupt",
+                tier=self.name, key=key, delay_s=delay_s,
+                wasted_bytes=nbytes, reason="corrupt_at_rest", at_rest=True,
+            )
+
     def _hedged(self, delay_s: float) -> float:
         if self.hedge is None:
             return delay_s
@@ -193,6 +251,7 @@ def default_backends(
     transfer: Optional[TransferModel] = None,
     clock: Optional[SimClock] = None,
     hedge: Optional["HedgePolicy"] = None,
+    faults: Optional[FaultInjector] = None,
 ) -> Dict[str, StorageBackend]:
     """One backend per tier: host_dram -> HostMemoryBackend (never hedged —
     local reads have no straggler tail), anything else -> ObjectStoreBackend."""
@@ -201,6 +260,6 @@ def default_backends(
         cls = HostMemoryBackend if name == "host_dram" else ObjectStoreBackend
         out[name] = cls(
             name, transfer=transfer, clock=clock,
-            hedge=hedge if cls.hedgeable else None,
+            hedge=hedge if cls.hedgeable else None, faults=faults,
         )
     return out

@@ -41,6 +41,7 @@ import hashlib
 import heapq
 import itertools
 import math
+import os
 import pathlib
 import pickle
 import shutil
@@ -55,6 +56,13 @@ from repro.kvcache.backend import (
     ObjectStoreBackend,
     StorageBackend,
     _MemoryBackend,
+)
+from repro.kvcache.faults import (
+    CorruptPayload,
+    FaultInjector,
+    KeyNotFound,
+    StorageError,
+    payload_checksum,
 )
 from repro.kvcache.chunks import ChunkTrie, PrefixMatch
 from repro.kvcache.fusion import ChunkIndex, CompositeMatch
@@ -118,18 +126,55 @@ class DiskSpillBackend(_MemoryBackend):
 
     # -- storage primitives --------------------------------------------- #
     def _write(self, key: str, payload: Any, nbytes: float) -> None:
-        with open(self._path(key), "wb") as f:
-            pickle.dump(payload, f)
+        # atomic spill (same temp-file + rename discipline as
+        # training/checkpoint.py): a crash mid-write can leave a stray temp
+        # file but never a torn payload under the final name.  The record
+        # embeds the content checksum put() stamped so a later process (or a
+        # corrupted-at-rest file) is caught on load, not served.
+        path = self._path(key)
+        record = {"payload": payload, "checksum": self._checksums.get(key)}
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(record, f)
+            os.replace(tmp, path)
+        except BaseException:
+            pathlib.Path(tmp).unlink(missing_ok=True)
+            raise
         self._nbytes[key] = nbytes
 
     def _read(self, key: str) -> Tuple[Any, float]:
         if key not in self._nbytes:
-            raise KeyError(
+            raise KeyNotFound(
                 f"{type(self).__name__} tier {self.name!r} has no payload "
-                f"under key {key!r}"
+                f"under key {key!r}",
+                tier=self.name, key=key, reason="not_found",
             )
-        with open(self._path(key), "rb") as f:
-            return pickle.load(f), self._nbytes[key]
+        try:
+            with open(self._path(key), "rb") as f:
+                record = pickle.load(f)
+        except FileNotFoundError:
+            raise KeyNotFound(
+                f"{type(self).__name__} tier {self.name!r} lost the spill "
+                f"file for key {key!r}",
+                tier=self.name, key=key, reason="not_found",
+            ) from None
+        except (pickle.UnpicklingError, EOFError, OSError) as e:
+            raise CorruptPayload(
+                f"tier {self.name!r} spill file for {key!r} is unreadable "
+                f"({e}): torn or corrupted at rest",
+                tier=self.name, key=key, reason="corrupt_at_rest",
+                at_rest=True,
+            ) from None
+        payload, want = record["payload"], record.get("checksum")
+        if want is not None and payload_checksum(payload) != want:
+            raise CorruptPayload(
+                f"tier {self.name!r} spill file for {key!r} fails its "
+                f"embedded checksum: corrupted at rest",
+                tier=self.name, key=key, reason="corrupt_at_rest",
+                at_rest=True,
+            )
+        return payload, self._nbytes[key]
 
     def _drop(self, key: str) -> bool:
         if self._nbytes.pop(key, None) is None:
@@ -365,6 +410,11 @@ class SharedTierBackend(ObjectStoreBackend):
                 f"nbytes must be >= 0, got {nbytes!r} "
                 f"(tier {self.name!r}, key {key!r})"
             )
+        self._check_brownout(key)
+        # same stamp-before-write contract as _MemoryBackend.put (this
+        # override bypasses it); identical content hashes identically, so
+        # dedup'd writes agree on the stamp
+        self._checksums[key] = payload_checksum(payload)
         cid = content if content is not None else self._key(key)
         if self.core.write(self._key(key), cid, payload, nbytes):
             # identical bytes already resident service-wide: free write
@@ -388,9 +438,10 @@ class SharedTierBackend(ObjectStoreBackend):
         try:
             return self.core.read(self._key(key))
         except KeyError:
-            raise KeyError(
+            raise KeyNotFound(
                 f"{type(self).__name__} tier {self.name!r} has no payload "
-                f"under key {key!r}"
+                f"under key {key!r}",
+                tier=self.name, key=key, reason="not_found",
             ) from None
 
     def _drop(self, key: str) -> bool:
@@ -420,6 +471,7 @@ def build_backends(
     transfer: Optional[TransferModel] = None,
     clock: Optional[SimClock] = None,
     hedge=None,
+    faults: Optional[FaultInjector] = None,
 ) -> Dict[str, StorageBackend]:
     """One backend per TierSpec: kind by name (host_dram -> host memory,
     local_nvme -> disk spill, peer*/rpc* -> RPC peer, else object store),
@@ -430,7 +482,7 @@ def build_backends(
         cls = _BACKEND_KINDS[spec.backend or _default_kind(spec.name)]
         b = cls(
             spec.name, transfer=transfer, clock=clock,
-            hedge=hedge if cls.hedgeable else None,
+            hedge=hedge if cls.hedgeable else None, faults=faults,
         )
         if spec.concurrency is not None:
             b = ConcurrencyLimitedBackend(b, spec.concurrency, clock=b.clock)
@@ -610,6 +662,7 @@ class TieredStore:
         migration: Optional[BreakEvenMigrator] = None,
         spill_on_pressure: bool = False,
         hedge=None,
+        faults: Optional[FaultInjector] = None,
     ):
         if tiers is None:
             assert tier_capacities_gb is not None, (
@@ -624,7 +677,8 @@ class TieredStore:
         self.transfer = transfer
         self.clock = clock or SimClock()
         self.backends: Dict[str, StorageBackend] = backends or build_backends(
-            tiers, transfer=transfer, clock=self.clock, hedge=hedge
+            tiers, transfer=transfer, clock=self.clock, hedge=hedge,
+            faults=faults,
         )
         missing = set(self.tier_order) - set(self.backends)
         assert not missing, f"tiers without a backend: {sorted(missing)}"
@@ -648,6 +702,11 @@ class TieredStore:
         self._ids = itertools.count()
         self.evictions = 0
         self.rejected_puts = 0
+        # failure-handling counters: puts rolled back because the backend
+        # raised a typed StorageError, entries discarded after the backend
+        # lost/corrupted their bytes
+        self.failed_puts = 0
+        self.discards = 0
         self.last_put_handle = None
         # bumped on every trie mutation (put/evict): consumers holding a
         # lookup result (e.g. the engine's prefetch pass) revalidate with it
@@ -783,7 +842,21 @@ class TieredStore:
         self.trie_version += 1
         if self.migration is not None:
             self._mig_dirty.add(entry_id)
-        handle = self._backend_put(e, artifact, tier, nbytes)
+        try:
+            handle = self._backend_put(e, artifact, tier, nbytes)
+        except StorageError:
+            # the tier refused the bytes (brownout/injected write failure):
+            # roll every piece of bookkeeping back so the store never
+            # advertises an entry whose payload was never accepted
+            self.trie.remove(chain, entry_id)
+            self.chunk_index.remove(content, entry_id)
+            ts.used_bytes -= nbytes
+            del self.entries[entry_id]
+            self._mig_dirty.discard(entry_id)
+            self.trie_version += 1
+            self.failed_puts += 1
+            self.last_put_handle = None
+            return None, 0.0
         # surfaced for telemetry: a dedup'd shared-tier put moved zero bytes,
         # and the ledger records that saving as an explicit zero-$ entry
         self.last_put_handle = handle
@@ -841,7 +914,18 @@ class TieredStore:
             self._mig_dirty.add(entry_id)
         if nbytes is None:
             nbytes = e.nbytes * max(0.0, min(1.0, fraction))
-        payload, handle = self.backends[e.tier].get(entry_id, nbytes=nbytes)
+        try:
+            payload, handle = self.backends[e.tier].get(entry_id, nbytes=nbytes)
+        except KeyNotFound:
+            # the backend lost the bytes: the metadata is a lie — drop it so
+            # the next lookup plans an honest recompute instead of retrying
+            self.discard(entry_id)
+            raise
+        except CorruptPayload as exc:
+            if exc.at_rest:
+                # the stored copy itself is bad; no retry can help
+                self.discard(entry_id)
+            raise
         art = compression.decompress_tree(payload) if e.compressed else payload
         return art, handle.delay_s
 
@@ -897,11 +981,18 @@ class TieredStore:
             return None
         self._accrue()
         from_tier = e.tier
-        self.backends[from_tier].delete(entry_id)
-        self.tiers[from_tier].used_bytes -= e.nbytes
+        # copy-then-delete: if the destination tier refuses the bytes the
+        # entry stays intact at its source instead of vanishing mid-move
+        old_nbytes, old_compressed = e.nbytes, e.compressed
         e.tier, e.nbytes, e.compressed = to_tier, new_nbytes, new_compressed
+        try:
+            self._backend_put(e, new_payload, to_tier, new_nbytes, charge=False)
+        except StorageError:
+            e.tier, e.nbytes, e.compressed = from_tier, old_nbytes, old_compressed
+            return None
+        self.backends[from_tier].delete(entry_id)
+        self.tiers[from_tier].used_bytes -= old_nbytes
         dst.used_bytes += new_nbytes
-        self._backend_put(e, new_payload, to_tier, new_nbytes, charge=False)
         self._mig_dirty.add(entry_id)  # tier changed: re-evaluate fresh
         mig = TierMigration(
             t_s=self.clock.now, entry_id=entry_id, from_tier=from_tier,
@@ -1106,6 +1197,25 @@ class TieredStore:
         self.evictions += 1
         return True
 
+    def discard(self, entry_id: str) -> bool:
+        """Unconditionally drop an entry whose stored bytes turned out to be
+        lost or corrupt.  Unlike eviction this is failure handling, not
+        economics: it ignores pins and value scores — metadata pointing at
+        bytes that cannot be served is worse than a miss."""
+        e = self.entries.get(entry_id)
+        if e is None:
+            return False
+        self.trie.remove(e.chain, e.entry_id)
+        self.chunk_index.remove(e.content_chunks, e.entry_id)
+        self.tiers[e.tier].used_bytes -= e.nbytes
+        self.backends[e.tier].delete(e.entry_id)
+        del self.entries[e.entry_id]
+        self._mig_dirty.discard(entry_id)
+        self._mig_next.pop(entry_id, None)
+        self.trie_version += 1
+        self.discards += 1
+        return True
+
     def digest_hashes(self) -> List[str]:
         """Every hash an affinity router could match against this store: the
         chain hashes (prefix reuse), chunk-content hashes (fused reuse), and
@@ -1132,6 +1242,8 @@ class TieredStore:
             "entries": len(self.entries),
             "evictions": self.evictions,
             "rejected_puts": self.rejected_puts,
+            "failed_puts": self.failed_puts,
+            "discards": self.discards,
             "migrations": len(self.migration_log),
             "migration_evals": self.migration_evals,
             "migration_skips": self.migration_skips,

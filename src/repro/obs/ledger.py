@@ -40,7 +40,11 @@ CATEGORIES = ("compute", "storage", "transfer")
 class LedgerEntry:
     category: str  # "compute" | "storage" | "transfer"
     # what caused the spend: "request" (compute), "fetch"/"write_back"
-    # (request-attributed transfers), "hold" (storage residency, per tier),
+    # (request-attributed transfers), "fetch_retry" (re-issued attempts
+    # under the retry policy — retry dollars separable by activity),
+    # "fetch_failed" (zero-$ marker per failed attempt; its wasted dollars
+    # were charged when the bytes moved, so conservation already holds),
+    # "hold" (storage residency, per tier),
     # "migration" | "rebalance" | "gossip" | "write_back_dedup" (infra),
     # "other" (a charge outside any attribution context — still conserved)
     activity: str

@@ -108,6 +108,28 @@ class Telemetry:
         self._m_gossip = r.counter(
             "gossip_ticks_total", "Digest gossip rounds", ()
         )
+        self._m_fetch_failed = r.counter(
+            "kv_fetch_failures_total", "Failed KV fetch attempts",
+            ("replica", "tier", "reason"),
+        )
+        self._m_fetch_retried = r.counter(
+            "kv_fetch_retries_total",
+            "Fetch attempts re-issued by the cost-aware retry policy",
+            ("replica", "tier"),
+        )
+        self._m_degraded = r.counter(
+            "requests_degraded_total",
+            "Requests that fell back to exact recompute after fetch failure",
+            ("replica",),
+        )
+        self._m_fetch_wasted = r.counter(
+            "kv_fetch_wasted_bytes_total",
+            "Bytes moved by fetch attempts that then failed",
+            ("replica", "tier"),
+        )
+        self._m_crashes = r.counter(
+            "replica_crashes_total", "Replicas lost mid-run", ("replica",)
+        )
 
     # ------------------------------------------------------------------ #
     # Event-driven feed (engines call this from step())
@@ -147,6 +169,19 @@ class Telemetry:
                 "transfer", "migration", 0.0, replica=replica,
                 tier=e.to_tier, nbytes=e.nbytes, kind="store",
             )
+        elif isinstance(e, ev.FetchFailed):
+            self._m_fetch_failed.inc(
+                replica=replica, tier=e.tier, reason=e.reason
+            )
+            self._m_fetch_wasted.inc(
+                e.wasted_bytes, replica=replica, tier=e.tier
+            )
+        elif isinstance(e, ev.FetchRetried):
+            self._m_fetch_retried.inc(replica=replica, tier=e.tier)
+        elif isinstance(e, ev.DegradedToRecompute):
+            self._m_degraded.inc(replica=replica)
+        elif isinstance(e, ev.ReplicaCrashed):
+            self._m_crashes.inc(replica=e.replica)
         elif isinstance(e, ev.RequestRouted):
             self._m_routed.inc(replica=replica)
         elif isinstance(e, ev.ReplicaRebalanced):
@@ -257,9 +292,16 @@ class Telemetry:
         g = r.gauge("fused_recompute_tokens", "Context tokens recomputed in fused launches", ("replica",))
         g.set(fs["recompute_tokens"], replica=rep)
 
+        fls = engine.fault_stats()
+        for k in ("fetch_failures", "fetch_retries", "degraded_requests",
+                  "fetch_wasted_s", "fetch_wasted_bytes"):
+            g = r.gauge(f"fault_{k}", "Failure-handling audit", ("replica",))
+            g.set(fls[k], replica=rep)
+
         ss = engine.store.stats()
         for k in ("entries", "evictions", "rejected_puts", "migration_evals",
-                  "migration_skips", "migration_queue", "content_chunks"):
+                  "migration_skips", "migration_queue", "content_chunks",
+                  "failed_puts", "discards"):
             g = r.gauge(f"store_{k}", "Tiered store audit", ("replica",))
             g.set(ss[k], replica=rep)
         tg = r.gauge("tier_used_gb", "Resident GB per tier", ("replica", "tier"))

@@ -26,6 +26,9 @@ class AuditRow:
     ttft_s: float
     e2e_s: float
     slo_ttft_s: Optional[float]
+    # the planned fetch failed and this request fell back to exact recompute
+    # (tokens unaffected; load_s carries the burned fetch time)
+    degraded: bool = False
 
     @property
     def slo_met(self) -> Optional[bool]:
@@ -62,6 +65,7 @@ def audit(
                     ttft_s=rec.ttft_s,
                     e2e_s=rec.e2e_s,
                     slo_ttft_s=slo.get(rec.req_id),
+                    degraded=getattr(rec, "degraded", False),
                 )
             )
     return sorted(rows, key=lambda r: r.req_id)
@@ -97,6 +101,7 @@ def slo_summary(rows: List[AuditRow]) -> Dict[str, int]:
         "slo_met": met,
         "slo_violated": violated,
         "no_slo": len(rows) - met - violated,
+        "degraded": sum(1 for r in rows if r.degraded),
     }
 
 
@@ -141,7 +146,8 @@ def format_table(rows: List[AuditRow]) -> str:
     """Fixed-width text table of the audit (the example's printout)."""
     header = (
         f"{'req':>4s} {'action':<10s} {'tier':<11s} {'queue s':>8s} "
-        f"{'load s':>8s} {'prefill s':>9s} {'TTFT s':>8s} {'SLO s':>7s} {'SLO':>4s}"
+        f"{'load s':>8s} {'prefill s':>9s} {'TTFT s':>8s} {'SLO s':>7s} "
+        f"{'SLO':>4s} {'deg':>4s}"
     )
     lines = [header]
     for r in rows:
@@ -150,6 +156,7 @@ def format_table(rows: List[AuditRow]) -> str:
         lines.append(
             f"{r.req_id:>4d} {r.action:<10s} {(r.tier or '-'):<11s} "
             f"{r.queue_s:8.3f} {r.load_s:8.3f} {r.prefill_s:9.3f} "
-            f"{r.ttft_s:8.3f} {slo} {verdict:>4s}"
+            f"{r.ttft_s:8.3f} {slo} {verdict:>4s} "
+            f"{'DEG' if r.degraded else '-':>4s}"
         )
     return "\n".join(lines)

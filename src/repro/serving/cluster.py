@@ -202,13 +202,14 @@ class ServingCluster:
             if self.core is not None and spec.name == self.cc.shared_tier:
                 b = SharedTierBackend(
                     spec.name, core=self.core, namespace=f"r{i}",
-                    transfer=transfer, clock=clock,
+                    transfer=transfer, clock=clock, faults=self.ec.faults,
                 )
             else:
                 kind = _BACKEND_KINDS[spec.backend or _default_kind(spec.name)]
                 b = kind(
                     spec.name, transfer=transfer, clock=clock,
                     hedge=self.ec.hedge if kind.hedgeable else None,
+                    faults=self.ec.faults,
                 )
             if spec.concurrency is not None:
                 b = ConcurrencyLimitedBackend(b, spec.concurrency, clock=clock)
@@ -262,6 +263,15 @@ class ServingCluster:
             if not self._pending:
                 return out  # fully drained
             now = self._pending[0][0]  # all idle: jump to the next arrival
+
+        # injected replica crashes fire at the cluster frontier, before any
+        # replica steps past them
+        if self.ec.faults is not None:
+            for plan in self.ec.faults.due_crashes(now):
+                if 0 <= plan.replica < len(self.replicas) and self._alive[
+                    plan.replica
+                ]:
+                    self.crash_replica(plan.replica, now, out)
 
         # at most one tick per step: a long idle jump re-arms from `now`
         # instead of replaying every missed cadence slot
@@ -462,6 +472,32 @@ class ServingCluster:
     # ------------------------------------------------------------------ #
     # Membership
     # ------------------------------------------------------------------ #
+    def crash_replica(self, idx: int, now: float, out) -> None:
+        """Kill a replica mid-run and recover its work: harvest its in-flight
+        (active-slot) and queued requests, release its shared-tier namespace
+        and digest (``remove_replica``), and resubmit the harvested requests
+        through the router to the survivors.  In-flight partial generations
+        are discarded and replayed from scratch on the landing replica —
+        decode is greedy and deterministic, so the resubmitted request's
+        tokens are identical to the run where the crash never happened."""
+        eng = self.replicas[idx]
+        inflight = [
+            s.request for s in eng.slots if s.active and s.request is not None
+        ]
+        queued = eng.queue.drain()
+        released = self.remove_replica(idx)
+        for req in inflight + queued:
+            self.submit(dataclasses.replace(req, arrival_s=max(req.arrival_s, now)))
+        self._emit_cluster(
+            idx,
+            ev.ReplicaCrashed(
+                t_s=now, req_id=-1, replica=idx,
+                inflight=len(inflight), queued=len(queued),
+                released_keys=released,
+            ),
+            out,
+        )
+
     def remove_replica(self, idx: int) -> int:
         """Take a replica out of the cluster (crash or drain-down): release
         every shared-tier key it owned — refcounting in the core keeps any

@@ -46,6 +46,7 @@ from repro.core.perf_model import PerfModel, tpu_v5e
 from repro.core.pricing import Pricing, tpu_v5e_pod
 from repro.kvcache import fusion, paged
 from repro.kvcache.backend import StorageBackend
+from repro.kvcache.faults import FaultInjector, RetryPolicy, StorageError
 from repro.kvcache.hierarchy import (
     BreakEvenMigrator,
     TieredStore,
@@ -138,6 +139,15 @@ class EngineConfig:
     # composite field entirely.  Packable attention archs only (assembled KV
     # needs per-position state); others never see a composite match.
     fusion_enabled: bool = False
+    # Seeded fault injection (kvcache/faults.FaultInjector): every storage
+    # backend consults it for transient failures / brownouts / corruption,
+    # and a ServingCluster for scheduled replica crashes.  None (default) =
+    # no injection; the engine still verifies put/get checksums.
+    faults: Optional[FaultInjector] = None
+    # Cost-aware retry applied when a planned fetch fails (exponential
+    # backoff; retries only while expected retry $ beats marginal recompute
+    # $).  None = RetryPolicy() defaults.
+    retry_policy: Optional[RetryPolicy] = None
 
 
 @dataclasses.dataclass
@@ -216,7 +226,9 @@ class ServingEngine:
             specs = [TierSpec(n, gb) for n, gb in self.ec.tier_capacities_gb.items()]
         self.backends = backends or build_backends(
             specs, transfer=self.transfer, clock=self.clock, hedge=self.ec.hedge,
+            faults=self.ec.faults,
         )
+        self.retry_policy = self.ec.retry_policy or RetryPolicy()
         migration = self.ec.migration_policy
         if migration is None and self.ec.migration_interval_s > 0:
             migration = BreakEvenMigrator(compute_cost_per_s=self._c_gpu_s)
@@ -325,6 +337,12 @@ class ServingEngine:
         self.admission_busy_s = 0.0  # modeled time spent in load+prefill
         self.decode_busy_s = 0.0  # modeled time spent in decode steps
         self.decode_tokens = 0  # tokens emitted by decode steps
+        # failure handling observability (fault injection / retry / degrade)
+        self.fetch_failures = 0  # failed fetch attempts (every attempt)
+        self.fetch_retries = 0  # attempts the retry policy re-issued
+        self.degraded_requests = 0  # admissions that fell back to recompute
+        self.fetch_wasted_s = 0.0  # time burned by failed attempts + backoff
+        self.fetch_wasted_bytes = 0.0  # transfer bytes charged but unusable
 
     # ------------------------------------------------------------------ #
     # jit'd compute
@@ -567,7 +585,10 @@ class ServingEngine:
     ) -> None:
         """Shared admission epilogue (post clock-advance): record fields that
         are common to both execute paths, emit the first token, activate."""
-        a.rec.action = a.plan.action if a.plan.reuses_kv else "recompute"
+        a.rec.action = (
+            a.plan.action if (a.plan.reuses_kv and not a.rec.degraded)
+            else "recompute"
+        )
         a.rec.plan = a.plan
         a.rec.tokens.append(first_tok)
         tok_ev = ev.TokenEmitted(
@@ -587,12 +608,15 @@ class ServingEngine:
     def _admit_single(self, req: Request, slot: Slot, events: List[ev.Event]) -> bool:
         a = self._plan_admission(req, slot, events)
         if a.plan.loads_kv and a.lookup.entry is not None:
-            load_s, prefill_s, logits, temp = self._execute_load(
-                req, a.plan, a.lookup, events
-            )
-            matched = a.plan.matched_tokens
+            self._fetch_kv_resilient(a, events)
+        if a.artifact is not None:
+            load_s, prefill_s, logits, temp = self._execute_load(req, a, events)
+            matched = a.matched
         else:
-            load_s, matched = 0.0, 0
+            # plain recompute, or a degraded fetch falling back to exact
+            # recompute mid-admission — the burned fetch time rides on load_s
+            # (a.delay is 0.0 on the plain path)
+            load_s, matched = a.delay, 0
             prefill_s, logits, temp = self._execute_recompute(req, a.plan, events)
         self._release_prefetch(req.req_id)
 
@@ -624,8 +648,7 @@ class ServingEngine:
         t0 = self.clock.now
         for a in admissions:
             if a.plan.loads_kv and a.lookup.entry is not None:
-                a.artifact, a.delay, a.nbytes = self._fetch_kv(a.req, a.plan, a.lookup)
-                a.matched = a.plan.matched_tokens
+                self._fetch_kv_resilient(a, events)
             self._release_prefetch(a.req.req_id)
             ctx = list(a.req.context_tokens)
             a.new_tokens = ctx[a.matched:] + list(a.req.prompt_tokens)
@@ -689,11 +712,18 @@ class ServingEngine:
                         matched_tokens=a.matched,
                     )
                 )
-            elif a.plan.store_after and tuple(a.req.context_tokens) not in written:
-                written.add(tuple(a.req.context_tokens))
-                ctx_len = len(a.req.context_tokens)
-                art = paged.packed_to_artifact(self.cfg, new_caches, seg, ctx_len)
-                self._write_back(a.req, jax.tree_util.tree_map(np.asarray, art), events)
+            else:
+                if a.rec.degraded:
+                    # the burned fetch time still delays this request (and,
+                    # through the batch barrier below, its batch-mates)
+                    a.load_s = a.delay
+                if a.plan.store_after and tuple(a.req.context_tokens) not in written:
+                    written.add(tuple(a.req.context_tokens))
+                    ctx_len = len(a.req.context_tokens)
+                    art = paged.packed_to_artifact(self.cfg, new_caches, seg, ctx_len)
+                    self._write_back(
+                        a.req, jax.tree_util.tree_map(np.asarray, art), events
+                    )
             events.append(
                 ev.PrefillDone(
                     t_s=t0, req_id=a.req.req_id,
@@ -743,17 +773,33 @@ class ServingEngine:
         sources: Dict[str, Any] = {}
         delays: List[float] = []
         fetched: List[tuple] = []  # (tier, nbytes, delay, rows) per source
+        wasted_total = 0.0
         for eid, rows in schedule.rows_by_entry().items():
             e = self.store.entries[eid]  # pinned at plan time: must exist
             nbytes = self._entry_fetch_bytes(e, rows)
             override = nbytes if self.cost_cfg is not self.cfg else None
-            with self._attr("fetch", req.req_id):
-                art, delay = self.store.fetch(
-                    eid, fraction=rows / max(e.n_tokens, 1), nbytes=override
-                )
+
+            def attempt(activity, eid=eid, e=e, rows=rows, override=override):
+                with self._attr(activity, req.req_id):
+                    return self.store.fetch(
+                        eid, fraction=rows / max(e.n_tokens, 1), nbytes=override
+                    )
+
+            out, wasted, attempts = self._retry_fetch(
+                req, tier=e.tier, entry_id=eid, matched=rows, nbytes=nbytes,
+                attempt_fn=attempt, events=events,
+            )
+            wasted_total += wasted
+            if out is None:
+                # one lost source spoils the composite: the whole fused
+                # admission degrades to exact recompute (time already burned
+                # on earlier sources rides along)
+                self._degrade_fused(a, wasted_total, attempts, e.tier, eid, events)
+                return
+            art, delay = out
             sources[eid] = art
-            delays.append(delay)
-            fetched.append((e.tier, nbytes, delay, rows))
+            delays.append(wasted + delay)
+            fetched.append((e.tier, nbytes, wasted + delay, rows))
         for eid in a.pins:
             self.store.unpin(eid)
         a.pins.clear()
@@ -846,6 +892,40 @@ class ServingEngine:
         a.rec.compute_cost += self._c_gpu_s * prefill_s
         self._finish_admission(a, int(jnp.argmax(logits[0])), events)
 
+    def _degrade_fused(
+        self, a: "_Admission", wasted_s: float, attempts: int,
+        tier: str, entry_id: str, events: List[ev.Event],
+    ) -> None:
+        """A fused source fetch exhausted its retries: abandon the composite
+        and run the request as one exact full recompute (tokens unchanged —
+        recompute is the ground truth the fusion approximates from)."""
+        req = a.req
+        for eid in a.pins:
+            self.store.unpin(eid)
+        a.pins.clear()
+        self._release_prefetch(req.req_id)
+        self.degraded_requests += 1
+        a.rec.degraded = True
+        events.append(ev.DegradedToRecompute(
+            t_s=self.clock.now, req_id=req.req_id, tier=tier,
+            entry_id=entry_id, attempts=attempts, wasted_s=wasted_s,
+            reason="fused_source_failed",
+        ))
+        prefill_s, logits, temp = self._execute_recompute(req, a.plan, events)
+        if self._paged_on:
+            self._land_state_in_pool(a.slot, temp)
+        else:
+            self._state = paged.insert_slot(
+                self.cfg, self._state, a.slot.index, temp
+            )
+        self.clock.advance(wasted_s + prefill_s)
+        self.admission_busy_s += wasted_s + prefill_s
+        a.rec.matched_tokens = 0
+        a.rec.load_s = wasted_s
+        a.rec.prefill_s = prefill_s
+        a.rec.compute_cost += self._c_gpu_s * prefill_s
+        self._finish_admission(a, int(jnp.argmax(logits[0])), events)
+
     # -- shared-block-pool landings (paged decode) ---------------------- #
     def _pool_update(self, dst: np.ndarray, sources) -> None:
         """Land KV rows at pool rows ``dst``: ``sources`` yields one
@@ -929,10 +1009,13 @@ class ServingEngine:
             ((pc.attn.k[:, src], pc.attn.v[:, src]) for pc in self._pool_caches),
         )
 
-    def _fetch_kv(self, req: Request, plan: ReusePlan, lookup: StoreLookup):
+    def _fetch_kv(self, req: Request, plan: ReusePlan, lookup: StoreLookup,
+                  activity: str = "fetch"):
         """Charge + execute the storage fetch of a load/partial plan; returns
         (artifact, delay_s, billed_nbytes).  A lookahead prefetch already in
-        flight shrinks the delay to its unfinished remainder."""
+        flight shrinks the delay to its unfinished remainder.  ``activity``
+        tags the ledger attribution ("fetch_retry" on re-issued attempts, so
+        retry dollars are separable)."""
         entry = lookup.entry
         matched = plan.matched_tokens
         nbytes = plan.fetch_bytes
@@ -943,7 +1026,7 @@ class ServingEngine:
             # limited backends) is modeled at the same scale as the delay.
             nbytes = self._entry_fetch_bytes(entry, matched)
             override = nbytes
-        with self._attr("fetch", req.req_id):
+        with self._attr(activity, req.req_id):
             artifact, delay = self.store.fetch(
                 entry.entry_id, fraction=matched / entry.n_tokens, nbytes=override
             )
@@ -953,6 +1036,105 @@ class ServingEngine:
             # only the unfinished remainder delays this request.
             delay = max(0.0, min(delay, ready - self.clock.now))
         return artifact, delay, nbytes
+
+    # -- failure handling: cost-aware retry + graceful degradation -------- #
+    def _retry_fetch(self, req: Request, *, tier: str, entry_id: str,
+                     matched: int, nbytes: float, attempt_fn,
+                     events: List[ev.Event]):
+        """Run one storage fetch (``attempt_fn(activity)``) under the
+        cost-aware retry policy.  Returns (result | None, wasted_s, attempts):
+        result is whatever ``attempt_fn`` returned on success; None means
+        every attempt failed (or retrying stopped beating recompute) and the
+        caller must degrade.  ``wasted_s`` accumulates the failed attempts'
+        charged delays plus backoff waits; the dollars those attempts burned
+        were already charged to the transfer model when their bytes moved."""
+        policy = self.retry_policy
+        wasted = 0.0
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                out = attempt_fn("fetch" if attempt == 1 else "fetch_retry")
+                return out, wasted, attempt
+            except StorageError as exc:
+                wasted += exc.delay_s
+                self.fetch_failures += 1
+                self.fetch_wasted_s += exc.delay_s
+                self.fetch_wasted_bytes += exc.wasted_bytes
+                events.append(ev.FetchFailed(
+                    t_s=self.clock.now, req_id=req.req_id, tier=tier,
+                    entry_id=entry_id, attempt=attempt, reason=exc.reason,
+                    wasted_s=exc.delay_s, wasted_bytes=exc.wasted_bytes,
+                ))
+                if self.telemetry is not None:
+                    # zero-$ marker: the wasted transfer dollars themselves
+                    # were charged (stats AND ledger) when the bytes moved,
+                    # so conservation already covers them — this entry makes
+                    # the waste queryable per request/tier
+                    self.telemetry.ledger.add(
+                        "transfer", "fetch_failed", 0.0,
+                        replica=self._replica, req_id=req.req_id,
+                        tier=tier, nbytes=exc.wasted_bytes, kind="load",
+                    )
+                backoff = policy.backoff(attempt)
+                retry_cost = policy.retry_cost(
+                    backoff_s=backoff,
+                    est_load_s=self.store.estimate_load_delay(tier, nbytes),
+                    nbytes=nbytes,
+                    gpu_cost_per_s=self._c_gpu_s,
+                    per_gb_fee=self.pricing.tier(tier).per_gb_transfer_fee,
+                )
+                recompute_cost = self._c_gpu_s * self.perf.t_prefill(
+                    self.cost_cfg, max(matched, 1)
+                )
+                if policy.should_retry(exc, attempt, tier=tier,
+                                       retry_cost=retry_cost,
+                                       recompute_cost=recompute_cost):
+                    wasted += backoff
+                    self.fetch_wasted_s += backoff
+                    self.fetch_retries += 1
+                    events.append(ev.FetchRetried(
+                        t_s=self.clock.now, req_id=req.req_id, tier=tier,
+                        entry_id=entry_id, attempt=attempt + 1,
+                        backoff_s=backoff,
+                    ))
+                    continue
+                return None, wasted, attempt
+
+    def _fetch_kv_resilient(self, a: "_Admission", events: List[ev.Event]) -> None:
+        """Execute a load/partial plan's fetch with retries.  On success
+        fills ``a.artifact/delay/nbytes/matched`` (wasted time from failed
+        attempts folded into the delay); on exhaustion leaves ``a.artifact``
+        None with the wasted time on ``a.delay`` and marks the record
+        degraded — the caller falls back to exact recompute, so tokens are
+        bit-identical to the fault-free run."""
+        req, plan, entry = a.req, a.plan, a.lookup.entry
+        nbytes = plan.fetch_bytes
+        if self.cost_cfg is not self.cfg:
+            nbytes = self._entry_fetch_bytes(entry, plan.matched_tokens)
+        out, wasted, attempts = self._retry_fetch(
+            req, tier=entry.tier, entry_id=entry.entry_id,
+            matched=plan.matched_tokens, nbytes=nbytes,
+            attempt_fn=lambda activity: self._fetch_kv(
+                req, plan, a.lookup, activity=activity
+            ),
+            events=events,
+        )
+        if out is None:
+            self.degraded_requests += 1
+            a.rec.degraded = True
+            a.artifact, a.nbytes, a.matched = None, 0.0, 0
+            a.delay = wasted
+            events.append(ev.DegradedToRecompute(
+                t_s=self.clock.now, req_id=req.req_id, tier=entry.tier,
+                entry_id=entry.entry_id, attempts=attempts, wasted_s=wasted,
+                reason="fetch_exhausted",
+            ))
+            return
+        artifact, delay, billed = out
+        a.artifact, a.nbytes = artifact, billed
+        a.delay = wasted + delay
+        a.matched = plan.matched_tokens
 
     def _write_back(self, req: Request, artifact: Any, events: List[ev.Event]) -> None:
         ctx = list(req.context_tokens)
@@ -1003,6 +1185,11 @@ class ServingEngine:
             match, entry = self.store.lookup(list(req.context_tokens))
             self.lookup_walks += 1
         partial_ok = paged.partial_reuse_allowed(self.cfg) and req.embeds is None
+        unavailable = frozenset(
+            t for t in self.store.tier_order
+            if self.ec.faults is not None
+            and self.ec.faults.browned_out(t, self.clock.now)
+        )
         frac = 0.0
         n_ctx = len(req.context_tokens)
         if entry is not None and match.matched_tokens > 0:
@@ -1026,7 +1213,13 @@ class ServingEngine:
         fused_bytes: Dict[str, float] = {}
         if self._fusion_on and req.embeds is None and frac < 1.0:
             comp = self.store.lookup_composite(list(req.context_tokens))
-            if comp.matched_tokens > 0:
+            if comp.matched_tokens > 0 and not any(
+                (e := self.store.entries.get(eid)) is not None
+                and e.tier in unavailable
+                for eid in comp.rows_by_entry()
+            ):
+                # a composite touching a browned-out tier is unplannable —
+                # one dead source spoils the whole assembly
                 composite = comp
                 for eid, rows in comp.rows_by_entry().items():
                     src = self.store.entries.get(eid)
@@ -1046,7 +1239,7 @@ class ServingEngine:
         return StoreLookup(
             match=match, entry=entry, fraction=frac, partial_ok=partial_ok,
             queue_wait_s=queue_wait, composite=composite,
-            fused_bytes_by_tier=fused_bytes,
+            fused_bytes_by_tier=fused_bytes, unavailable_tiers=unavailable,
         )
 
     def _entry_fetch_bytes(self, e, matched_tokens: int) -> float:
@@ -1062,16 +1255,14 @@ class ServingEngine:
     # Execute: the two plan interpretations
     # ------------------------------------------------------------------ #
     def _execute_load(
-        self, req: Request, plan: ReusePlan, lookup: StoreLookup,
-        events: List[ev.Event],
+        self, req: Request, a: "_Admission", events: List[ev.Event]
     ):
-        """Fetch stored context state, insert it, prefill only the unmatched
-        tail + prompt."""
-        entry = lookup.entry
-        matched = plan.matched_tokens
+        """Insert the already-fetched stored context state (see
+        ``_fetch_kv_resilient``), prefill only the unmatched tail + prompt."""
+        entry = a.lookup.entry
+        matched = a.matched
         temp = self.api.init_state(self.cfg, 1, self.ec.max_len)
-        artifact, delay, nbytes = self._fetch_kv(req, plan, lookup)
-        temp = paged.insert_slot(self.cfg, temp, 0, artifact, n_tokens=matched)
+        temp = paged.insert_slot(self.cfg, temp, 0, a.artifact, n_tokens=matched)
         ctx = list(req.context_tokens)
         tail = [] if req.embeds is not None else ctx[matched:]
         tokens = jnp.asarray([tail + list(req.prompt_tokens)], jnp.int32)
@@ -1080,13 +1271,13 @@ class ServingEngine:
             self.cost_cfg, len(tail) + len(req.prompt_tokens)
         )
         if self.ec.overlap_load:
-            load_s = max(0.0, delay - prefill_s)
+            load_s = max(0.0, a.delay - prefill_s)
         else:
-            load_s = delay
+            load_s = a.delay
         events.append(
             ev.KVLoaded(
                 t_s=self.clock.now, req_id=req.req_id, tier=entry.tier,
-                nbytes=nbytes, load_s=load_s, matched_tokens=matched,
+                nbytes=a.nbytes, load_s=load_s, matched_tokens=matched,
             )
         )
         events.append(
@@ -1221,6 +1412,23 @@ class ServingEngine:
             "busy_s": self.fused_busy_s,
             "jit": self.fused_jit.as_dict(),
         }
+
+    def fault_stats(self) -> Dict[str, Any]:
+        """Failure-handling counters: failed/retried fetch attempts, requests
+        degraded to recompute, burned fetch time/bytes, store-side rollbacks
+        and discards, plus the injector's own tally when one is wired."""
+        out = {
+            "fetch_failures": self.fetch_failures,
+            "fetch_retries": self.fetch_retries,
+            "degraded_requests": self.degraded_requests,
+            "fetch_wasted_s": self.fetch_wasted_s,
+            "fetch_wasted_bytes": self.fetch_wasted_bytes,
+            "failed_puts": self.store.failed_puts,
+            "discards": self.store.discards,
+        }
+        if self.ec.faults is not None:
+            out["injector"] = self.ec.faults.stats()
+        return out
 
     def _store_tier(self) -> str:
         if self.ec.store_tier is not None:

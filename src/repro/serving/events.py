@@ -21,7 +21,7 @@ simulated time to the next arrival.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Union
+from typing import List, Optional, Union
 
 from repro.serving.planner import ReusePlan
 from repro.serving.request import RequestRecord
@@ -154,10 +154,64 @@ class ReplicaRebalanced(Event):
     hits: int  # routed hits at the target that justified the copy
 
 
+@dataclasses.dataclass(frozen=True)
+class FetchFailed(Event):
+    """One planned KV fetch attempt failed (transient drop, brownout,
+    corruption, or a vanished key).  ``wasted_s``/``wasted_bytes`` are what
+    the failed attempt burned — already charged to the transfer model when
+    bytes actually moved (brownouts fail fast and free)."""
+
+    tier: str
+    entry_id: str
+    attempt: int  # 1-based attempt number that failed
+    reason: str  # "unavailable" | "brownout" | "corrupt" | "corrupt_at_rest" | "not_found"
+    wasted_s: float
+    wasted_bytes: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FetchRetried(Event):
+    """The cost-aware retry policy decided another attempt still beats
+    recomputing: attempt ``attempt`` will run after ``backoff_s``."""
+
+    tier: str
+    entry_id: str
+    attempt: int  # the attempt about to run (>= 2)
+    backoff_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradedToRecompute(Event):
+    """All fetch attempts failed (or retrying stopped beating recompute):
+    the request falls back to exact recompute mid-admission.  Tokens are
+    bit-identical to the fault-free run; the price is ``wasted_s`` of burned
+    fetch time plus the full prefill."""
+
+    tier: Optional[str]
+    entry_id: Optional[str]
+    attempts: int  # fetch attempts made before degrading
+    wasted_s: float
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaCrashed(Event):
+    """A replica died mid-run (req_id is -1: a cluster-level act).  Its
+    in-flight and queued requests were harvested and resubmitted to the
+    surviving replicas through the router; its shared-tier namespace was
+    released and its digest invalidated."""
+
+    replica: int
+    inflight: int  # active-slot requests resubmitted
+    queued: int  # admission-queue requests resubmitted
+    released_keys: int  # shared-tier keys released by the crash
+
+
 AnyEvent = Union[
     RequestAdmitted, PlanChosen, BatchAdmitted, KVLoaded, FusedAdmitted,
     PrefillDone, StoreWriteBack, TokenEmitted, RequestFinished, ClockAdvanced,
-    TierMigrated, RequestRouted, ReplicaRebalanced,
+    TierMigrated, RequestRouted, ReplicaRebalanced, FetchFailed, FetchRetried,
+    DegradedToRecompute, ReplicaCrashed,
 ]
 
 

@@ -63,13 +63,21 @@ class StoreLookup:
     # tier -> bytes the composite's matched chunks would fetch from it (at
     # economics scale) — the fused option's load/fee pricing surface.
     fused_bytes_by_tier: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # tiers browned out at lookup time (kvcache.faults.Brownout windows):
+    # the planner must not plan a load from them — a fetch would fail fast.
+    unavailable_tiers: frozenset = frozenset()
 
     @property
     def hit(self) -> bool:
-        return self.entry is not None and self.fraction > 0
+        return (
+            self.entry is not None
+            and self.fraction > 0
+            and self.entry.tier not in self.unavailable_tiers
+        )
 
     def available(self) -> Dict[str, float]:
-        """tier name -> matched fraction, the policy's option set."""
+        """tier name -> matched fraction, the policy's option set (tiers in
+        a brownout window are excluded — loads from them cannot succeed)."""
         return {self.entry.tier: self.fraction} if self.hit else {}
 
     @property

@@ -49,6 +49,9 @@ class RequestRecord:
     decode_s: float = 0.0
     finish_s: float = 0.0
     compute_cost: float = 0.0
+    # the planned fetch failed and this request fell back to exact recompute
+    # mid-admission (tokens unaffected; load_s carries the wasted fetch time)
+    degraded: bool = False
 
     @property
     def queue_s(self) -> float:

@@ -83,5 +83,16 @@ class AdmissionQueue:
         self._promote(now)
         return [e[3] for e in heapq.nsmallest(limit, self._ready)]
 
+    def drain(self) -> List[Request]:
+        """Remove and return EVERY queued request (arrived or not) in a
+        deterministic order — crash harvesting: a dead replica's queue is
+        resubmitted to the survivors through the router."""
+        out = [e[3] for e in sorted(self._pending)] + [
+            e[3] for e in sorted(self._ready)
+        ]
+        self._pending.clear()
+        self._ready.clear()
+        return out
+
     def __len__(self) -> int:
         return len(self._pending) + len(self._ready)

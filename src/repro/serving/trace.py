@@ -209,6 +209,7 @@ def _record(d: Dict[str, Any]):
         start_s=d["start_s"], load_s=d["load_s"],
         prefill_s=d["prefill_s"], decode_s=d["decode_s"],
         finish_s=d["finish_s"], compute_cost=d["compute_cost"],
+        degraded=d.get("degraded", False),  # absent in pre-faults traces
     )
 
 

@@ -1,0 +1,531 @@
+"""Fault injection and failure handling: the typed error taxonomy, checksum
+integrity, the seeded deterministic injector, cost-aware retries, graceful
+degradation to recompute, and cluster crash recovery.
+
+The headline properties (deterministic mirrors + hypothesis chaos): under ANY
+seeded fault schedule — transient fetch failures, in-flight corruption, tier
+brownouts, a mid-run replica crash — every request still finishes with tokens
+bitwise-identical to the fault-free run, and the cost ledger still conserves
+against the serving summary at 1e-9."""
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config, reduced_config
+from repro.kvcache.backend import HostMemoryBackend
+from repro.kvcache.faults import (
+    CorruptPayload,
+    FaultInjector,
+    KeyNotFound,
+    RetryPolicy,
+    StorageError,
+    TierUnavailable,
+    payload_checksum,
+    retryable,
+)
+from repro.kvcache.hierarchy import DiskSpillBackend, TieredStore, TierSpec
+from repro.models import registry
+from repro.obs import Telemetry
+from repro.serving import (
+    AlwaysReusePlanner,
+    ClusterConfig,
+    EngineConfig,
+    Request,
+    ServingCluster,
+    ServingEngine,
+)
+from repro.serving import events as ev
+from repro.serving.scheduler import AdmissionQueue
+
+
+# --------------------------------------------------------------------------- #
+# Typed errors
+# --------------------------------------------------------------------------- #
+class TestTypedErrors:
+    def test_retryable_classification(self):
+        assert retryable(TierUnavailable("x", tier="s3"))
+        assert retryable(CorruptPayload("x", at_rest=False))
+        assert not retryable(CorruptPayload("x", at_rest=True))
+        assert not retryable(KeyNotFound("x", tier="s3", key="k"))
+        assert not retryable(ValueError("not a storage error"))
+
+    def test_key_not_found_is_a_key_error(self):
+        # back-compat: pre-existing ``except KeyError`` call sites keep working
+        with pytest.raises(KeyError):
+            raise KeyNotFound("gone", tier="host_dram", key="k")
+
+    def test_error_carries_accounting_context(self):
+        e = TierUnavailable("drop", tier="s3", key="k", delay_s=0.25,
+                            wasted_bytes=1024.0, reason="unavailable")
+        assert (e.tier, e.key, e.delay_s, e.wasted_bytes, e.reason) == \
+            ("s3", "k", 0.25, 1024.0, "unavailable")
+        assert isinstance(e, StorageError)
+
+
+# --------------------------------------------------------------------------- #
+# Content checksum
+# --------------------------------------------------------------------------- #
+class TestChecksum:
+    def test_container_identity_irrelevant(self):
+        a = {"k": np.arange(6, dtype=np.float32), "v": [1, 2, (3, "s")]}
+        b = {"k": np.arange(6, dtype=np.float32), "v": [1, 2, (3, "s")]}
+        assert payload_checksum(a) == payload_checksum(b)
+
+    def test_content_change_detected(self):
+        a = {"k": np.zeros(4, np.float32)}
+        b = {"k": np.zeros(4, np.float32)}
+        b["k"][2] = 1e-7
+        assert payload_checksum(a) != payload_checksum(b)
+
+    def test_dtype_and_shape_matter(self):
+        assert payload_checksum(np.zeros(4, np.float32)) != \
+            payload_checksum(np.zeros(4, np.float64))
+        assert payload_checksum(np.zeros((2, 2), np.float32)) != \
+            payload_checksum(np.zeros(4, np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# Seeded injector
+# --------------------------------------------------------------------------- #
+class TestInjector:
+    def test_deterministic_across_instances(self):
+        a = FaultInjector(seed=5, fail_rate=0.3, corrupt_rate=0.2)
+        b = FaultInjector(seed=5, fail_rate=0.3, corrupt_rate=0.2)
+        keys = [f"k{i}" for i in range(200)]
+        assert [a.should_fail("s3", k) for k in keys] == \
+            [b.should_fail("s3", k) for k in keys]
+        assert [a.should_corrupt("s3", k) for k in keys] == \
+            [b.should_corrupt("s3", k) for k in keys]
+
+    def test_interleaving_independent(self):
+        """The n-th draw for a (tier, key) is a pure hash — what other keys
+        or tiers did in between cannot change it."""
+        a = FaultInjector(seed=9, fail_rate=0.4)
+        b = FaultInjector(seed=9, fail_rate=0.4)
+        seq_a = [a.should_fail("s3", "hot") for _ in range(20)]
+        seq_b = []
+        for i in range(20):
+            b.should_fail("host_dram", f"noise{i}")  # interleaved traffic
+            seq_b.append(b.should_fail("s3", "hot"))
+            b.should_fail("s3", f"other{i}")
+        assert seq_a == seq_b
+
+    def test_rates_are_respected_statistically(self):
+        inj = FaultInjector(seed=0, fail_rate=0.3, corrupt_rate=0.1)
+        n = 4000
+        fails = sum(inj.should_fail("s3", f"k{i}") for i in range(n))
+        corrupts = sum(inj.should_corrupt("s3", f"k{i}") for i in range(n))
+        assert abs(fails / n - 0.3) < 0.05
+        assert abs(corrupts / n - 0.1) < 0.05
+        assert inj.stats()["injected_failures"] == fails
+
+    def test_per_tier_rates_and_arm(self):
+        inj = FaultInjector(seed=1, fail_rate={"s3": 1.0})
+        assert inj.should_fail("s3", "k")
+        assert not inj.should_fail("host_dram", "k")
+        inj.arm(fail_rate={"*": 0.0})
+        assert not inj.should_fail("s3", "k")
+
+    def test_brownout_window(self):
+        inj = FaultInjector(seed=0)
+        inj.add_brownout("host_dram", 1.0, 2.0)
+        assert not inj.browned_out("host_dram", 0.5)
+        assert inj.browned_out("host_dram", 1.0)
+        assert inj.browned_out("host_dram", 1.999)
+        assert not inj.browned_out("host_dram", 2.0)  # half-open window
+        assert not inj.browned_out("s3", 1.5)
+        assert inj.stats()["brownout_rejections"] == 2
+
+    def test_due_crashes_pop_once(self):
+        inj = FaultInjector(seed=0)
+        inj.schedule_crash(1, 0.5)
+        inj.schedule_crash(0, 2.0)
+        assert inj.due_crashes(0.4) == []
+        due = inj.due_crashes(1.0)
+        assert [(c.replica, c.at_s) for c in due] == [(1, 0.5)]
+        assert inj.due_crashes(1.0) == []  # popped, not re-fired
+        assert [(c.replica, c.at_s) for c in inj.due_crashes(3.0)] == [(0, 2.0)]
+        assert inj.stats()["crashes_fired"] == 2
+
+    @given(seed=st.integers(0, 2**32 - 1),
+           rate=st.floats(0.0, 1.0),
+           key=st.text(min_size=1, max_size=12))
+    @settings(max_examples=50, deadline=None)
+    def test_draw_sequence_is_pure(self, seed, rate, key):
+        a = FaultInjector(seed=seed, fail_rate=rate)
+        b = FaultInjector(seed=seed, fail_rate=rate)
+        assert [a.should_fail("s3", key) for _ in range(8)] == \
+            [b.should_fail("s3", key) for _ in range(8)]
+
+
+# --------------------------------------------------------------------------- #
+# Retry policy
+# --------------------------------------------------------------------------- #
+class TestRetryPolicy:
+    def test_backoff_grows_exponentially(self):
+        p = RetryPolicy(backoff_s=0.01, backoff_factor=2.0)
+        assert p.backoff(1) == pytest.approx(0.01)
+        assert p.backoff(2) == pytest.approx(0.02)
+        assert p.backoff(3) == pytest.approx(0.04)
+
+    def test_attempt_bounds_and_tier_override(self):
+        p = RetryPolicy(max_attempts=3, tier_max_attempts={"s3": 1},
+                        cost_aware=False)
+        exc = TierUnavailable("x", tier="host_dram")
+        assert p.should_retry(exc, 1)
+        assert p.should_retry(exc, 2)
+        assert not p.should_retry(exc, 3)
+        assert not p.should_retry(TierUnavailable("x", tier="s3"), 1)
+
+    def test_permanent_failures_never_retry(self):
+        p = RetryPolicy(cost_aware=False)
+        assert not p.should_retry(KeyNotFound("x", tier="s3", key="k"), 1)
+        assert not p.should_retry(CorruptPayload("x", at_rest=True), 1)
+        assert p.should_retry(CorruptPayload("x", at_rest=False), 1)
+
+    def test_cost_gate_prefers_recompute_when_cheaper(self):
+        p = RetryPolicy(max_attempts=5, cost_aware=True)
+        exc = TierUnavailable("x", tier="s3")
+        # retrying is cheaper than recomputing: retry
+        assert p.should_retry(exc, 1, retry_cost=1e-6, recompute_cost=1e-3)
+        # recompute is cheaper: stop retrying even with attempts left
+        assert not p.should_retry(exc, 1, retry_cost=1e-3,
+                                  recompute_cost=1e-6)
+
+    def test_retry_cost_prices_idle_gpu_and_refetch(self):
+        p = RetryPolicy()
+        gb = 1024.0 ** 3
+        c = p.retry_cost(backoff_s=0.1, est_load_s=0.4, nbytes=2 * gb,
+                         gpu_cost_per_s=10.0, per_gb_fee=0.5)
+        assert c == pytest.approx(10.0 * 0.5 + 0.5 * 2)
+
+
+# --------------------------------------------------------------------------- #
+# Backend integrity: atomic spill, checksum verify, typed raises
+# --------------------------------------------------------------------------- #
+class TestBackendIntegrity:
+    def test_disk_spill_atomic_no_stray_tmp(self, tmp_path):
+        b = DiskSpillBackend("local_nvme", root=tmp_path)
+        b.put("k", {"x": np.arange(8, dtype=np.float32)}, nbytes=32.0)
+        assert not list(tmp_path.glob("*.tmp"))
+        payload, _ = b.get("k")
+        assert np.allclose(payload["x"], np.arange(8, dtype=np.float32))
+
+    def test_disk_spill_torn_file_raises_corrupt_at_rest(self, tmp_path):
+        b = DiskSpillBackend("local_nvme", root=tmp_path)
+        b.put("k", {"x": np.zeros(16, np.float32)}, nbytes=64.0)
+        path = b._path("k")
+        path.write_bytes(path.read_bytes()[: path.stat().st_size // 2])
+        with pytest.raises(CorruptPayload) as ei:
+            b.get("k")
+        assert ei.value.at_rest
+
+    def test_disk_spill_bitrot_fails_embedded_checksum(self, tmp_path):
+        import pickle
+
+        b = DiskSpillBackend("local_nvme", root=tmp_path)
+        b.put("k", {"x": np.zeros(16, np.float32)}, nbytes=64.0)
+        path = b._path("k")
+        rec = pickle.loads(path.read_bytes())
+        rec["payload"]["x"][3] = 42.0  # valid pickle, rotten content
+        path.write_bytes(pickle.dumps(rec))
+        with pytest.raises(CorruptPayload) as ei:
+            b.get("k")
+        assert ei.value.at_rest
+
+    def test_missing_key_raises_typed_not_found(self, tmp_path):
+        with pytest.raises(KeyNotFound):
+            DiskSpillBackend("local_nvme", root=tmp_path).get("never-put")
+        with pytest.raises(KeyNotFound):
+            HostMemoryBackend("host_dram").get("never-put")
+
+    def test_memory_backend_verifies_checksum_on_get(self):
+        b = HostMemoryBackend("host_dram")
+        b.put("k", {"x": np.zeros(4, np.float32)}, nbytes=16.0)
+        tampered = {"x": np.zeros(4, np.float32)}
+        tampered["x"][0] = 1.0
+        b._data["k"] = (tampered, 16.0)
+        with pytest.raises(CorruptPayload) as ei:
+            b.get("k")
+        assert ei.value.at_rest
+
+    def test_injected_faults_fire_after_charge(self):
+        inj = FaultInjector(seed=0, fail_rate=1.0)
+        b = HostMemoryBackend("host_dram", faults=inj)
+        b.put("k", {"x": np.zeros(4, np.float32)}, nbytes=16.0)
+        with pytest.raises(TierUnavailable) as ei:
+            b.get("k")
+        assert ei.value.wasted_bytes == 16.0
+
+    def test_brownout_fails_fast_uncharged(self):
+        inj = FaultInjector(seed=0)
+        inj.add_brownout("host_dram", 0.0, 10.0)
+        b = HostMemoryBackend("host_dram", faults=inj)
+        with pytest.raises(TierUnavailable):
+            b.put("k", {"x": np.zeros(4, np.float32)}, nbytes=16.0)
+        with pytest.raises(TierUnavailable) as ei:
+            b.get("k")
+        assert ei.value.delay_s == 0.0  # no bytes ever moved
+
+
+# --------------------------------------------------------------------------- #
+# Store-level handling: put rollback, corrupt-entry discard
+# --------------------------------------------------------------------------- #
+class TestStoreFailureHandling:
+    def _store(self, faults=None):
+        return TieredStore(
+            tiers=[TierSpec("host_dram", 1.0)], chunk_tokens=4, faults=faults,
+        )
+
+    def test_failed_put_rolls_back_all_bookkeeping(self):
+        inj = FaultInjector(seed=0)
+        inj.add_brownout("host_dram", 0.0, 10.0)
+        s = self._store(faults=inj)
+        eid, delay = s.put(list(range(8)), {"x": np.zeros(4, np.float32)},
+                           tier="host_dram")
+        assert eid is None and delay == 0.0
+        assert s.failed_puts == 1
+        assert not s.entries  # never advertised
+        _, entry = s.lookup(list(range(8)))
+        assert entry is None
+
+    def test_at_rest_corruption_discards_entry(self):
+        s = self._store()
+        eid, _ = s.put(list(range(8)), {"x": np.zeros(4, np.float32)},
+                       tier="host_dram")
+        assert eid is not None
+        tampered = {"x": np.zeros(4, np.float32)}
+        tampered["x"][0] = 5.0
+        s.backends["host_dram"]._data[eid] = (tampered, 16.0)
+        with pytest.raises(CorruptPayload):
+            s.fetch(eid)
+        assert s.discards == 1
+        assert eid not in s.entries  # next lookup plans an honest recompute
+
+
+# --------------------------------------------------------------------------- #
+# Queue drain (crash harvesting)
+# --------------------------------------------------------------------------- #
+def _req(i, arrival=0.0):
+    return Request(req_id=i, context_tokens=[1, 2, 3], prompt_tokens=[4],
+                   max_new_tokens=1, arrival_s=arrival)
+
+
+class TestQueueDrain:
+    def test_drain_returns_everything_once(self):
+        q = AdmissionQueue()
+        for i in range(4):
+            q.push(_req(i, arrival=0.1 * i))
+        q.pop_admissible(1.0)  # one already admitted: not drained
+        got = q.drain()
+        assert sorted(r.req_id for r in got) == [1, 2, 3]
+        assert q.drain() == []
+        assert q.pop_admissible(10.0) is None
+
+    def test_drain_covers_pending_and_ready(self):
+        q = AdmissionQueue()
+        q.push(_req(0, arrival=0.0))
+        q.push(_req(1, arrival=99.0))  # not yet arrived
+        q.peek_next(0.0)  # promotes req 0 into the ready heap
+        assert sorted(r.req_id for r in q.drain()) == [0, 1]
+
+
+# --------------------------------------------------------------------------- #
+# Engine: retries, degradation, brownout planning — tokens never change
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("llama-7b"))
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n=6, n_ctx=2, ctx_len=48, prompt_len=8, new=3, seed=0):
+    rng = np.random.default_rng(seed)
+    ctxs = [list(map(int, rng.integers(0, cfg.vocab, ctx_len)))
+            for _ in range(n_ctx)]
+    return [
+        dict(req_id=i, context_tokens=ctxs[i % n_ctx],
+             prompt_tokens=list(map(int, rng.integers(0, cfg.vocab,
+                                                      prompt_len))),
+             max_new_tokens=new, arrival_s=i * 0.01,
+             expected_reuses=max(n // n_ctx, 1))
+        for i in range(n)
+    ]
+
+
+def _run_engine(cfg, params, reqs, *, faults=None, retry=None, tel=None,
+                **ec_kw):
+    ec = EngineConfig(max_slots=2, max_len=128, chunk_tokens=16,
+                      faults=faults, retry_policy=retry, **ec_kw)
+    eng = ServingEngine(cfg, params, engine_cfg=ec,
+                        planner=AlwaysReusePlanner(), telemetry=tel)
+    for r in reqs:
+        eng.submit(Request(**r))
+    summary = eng.run()
+    return eng, summary, {r.req_id: r.tokens for r in eng.records}
+
+
+class TestEngineDegradation:
+    def test_faulted_engine_is_token_identical(self, setup):
+        cfg, params = setup
+        reqs = _requests(cfg)
+        _, _, tok0 = _run_engine(cfg, params, reqs)
+
+        tel = Telemetry()
+        inj = FaultInjector(seed=7, fail_rate=0.4, corrupt_rate=0.2)
+        eng, summary, tok1 = _run_engine(
+            cfg, params, reqs, faults=inj,
+            retry=RetryPolicy(max_attempts=2, cost_aware=False), tel=tel,
+        )
+        assert tok1 == tok0
+        fs = eng.fault_stats()
+        assert fs["fetch_failures"] > 0
+        assert fs["fetch_wasted_bytes"] > 0
+        evs = [e for _, e in tel.events]  # replica-tagged, replica 0 here
+        n_failed = sum(isinstance(e, ev.FetchFailed) for e in evs)
+        n_deg = sum(isinstance(e, ev.DegradedToRecompute) for e in evs)
+        assert n_failed == fs["fetch_failures"]
+        assert n_deg == fs["degraded_requests"]
+        # degraded requests are recorded as recompute and flagged
+        degraded_ids = {e.req_id for e in evs
+                        if isinstance(e, ev.DegradedToRecompute)}
+        for rec in eng.records:
+            assert rec.degraded == (rec.req_id in degraded_ids)
+            if rec.degraded:
+                assert rec.action == "recompute"
+        # the ledger still conserves, wasted attempts marked zero-dollar
+        tel.check(summary)
+        marks = [e for e in tel.ledger.entries
+                 if e.activity == "fetch_failed"]
+        assert len(marks) == fs["fetch_failures"]
+        assert all(m.dollars == 0.0 and m.nbytes > 0 for m in marks)
+
+    def test_cost_aware_gate_skips_pointless_retries(self, setup):
+        """At reduced-config scale recomputing a short prefix costs almost
+        nothing, so the cost-aware gate degrades instead of retrying."""
+        cfg, params = setup
+        reqs = _requests(cfg)
+        inj = FaultInjector(seed=7, fail_rate=0.8)
+        eng, _, _ = _run_engine(cfg, params, reqs, faults=inj,
+                                retry=RetryPolicy(max_attempts=3))
+        fs = eng.fault_stats()
+        assert fs["fetch_failures"] > 0 and fs["fetch_retries"] == 0
+
+    def test_brownout_plans_around_the_tier(self, setup):
+        """Entries ingested BEFORE the window exist on the browned-out tier,
+        but requests arriving inside it plan an honest recompute — the
+        lookup excludes unavailable tiers, so no fetch is ever attempted."""
+        cfg, params = setup
+        reqs = _requests(cfg)
+        late = [dict(r, req_id=r["req_id"] + 10, arrival_s=1e3 + r["arrival_s"])
+                for r in reqs[:2]]
+        kw = dict(tier_specs=[TierSpec("host_dram", 1.0)],
+                  store_tier="host_dram")
+        _, _, tok0 = _run_engine(cfg, params, reqs + late, **kw)
+        inj = FaultInjector(seed=1)
+        inj.add_brownout("host_dram", 500.0, 1e9)
+        eng, _, tok1 = _run_engine(cfg, params, reqs + late, faults=inj, **kw)
+        assert tok1 == tok0
+        acts = {r.req_id: r.action for r in eng.records}
+        assert "load" in acts.values()  # pre-window traffic did reuse
+        assert len(eng.store.entries) > 0  # entries exist on the dead tier
+        assert all(acts[r["req_id"]] == "recompute" for r in late)
+        # planned around, never attempted: degradation-free graceful path
+        assert eng.fault_stats()["fetch_failures"] == 0
+        assert inj.stats()["brownout_rejections"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# Cluster: mid-run crash recovery + the chaos property
+# --------------------------------------------------------------------------- #
+def _run_cluster(cfg, params, reqs, *, faults=None, retry=None, tel=None):
+    ec = EngineConfig(
+        max_slots=2, max_len=128, chunk_tokens=16,
+        tier_specs=[TierSpec("host_dram", 1.0), TierSpec("s3", 1.0)],
+        faults=faults, retry_policy=retry,
+    )
+    cl = ServingCluster(cfg, params,
+                        cluster_cfg=ClusterConfig(n_replicas=2),
+                        engine_cfg=ec, planner_factory=AlwaysReusePlanner,
+                        telemetry=tel)
+    for r in reqs:
+        cl.submit(Request(**r))
+    summary = cl.run()
+    return cl, summary, {r.req_id: r.tokens for r in cl.records}
+
+
+@pytest.fixture(scope="module")
+def cluster_baseline(setup):
+    cfg, params = setup
+    reqs = _requests(cfg, n=8)
+    _, _, tok0 = _run_cluster(cfg, params, reqs)
+    return reqs, tok0
+
+
+class TestClusterCrash:
+    def test_crash_resubmits_and_stays_token_identical(self, setup,
+                                                       cluster_baseline):
+        cfg, params = setup
+        reqs, tok0 = cluster_baseline
+        tel = Telemetry()
+        inj = FaultInjector(seed=3, fail_rate=0.3)
+        inj.schedule_crash(1, 0.02)
+        cl, summary, tok1 = _run_cluster(
+            cfg, params, reqs, faults=inj,
+            retry=RetryPolicy(max_attempts=2, cost_aware=False), tel=tel,
+        )
+        crashes = [e for _, e in cl.events if isinstance(e, ev.ReplicaCrashed)]
+        assert len(crashes) == 1 and crashes[0].replica == 1
+        assert inj.stats()["crashes_fired"] == 1
+        # every request (including harvested in-flight/queued ones) finished,
+        # exactly once, with the fault-free tokens
+        assert tok1 == tok0
+        # the dead replica took no requests after the crash
+        assert all(rec.req_id in tok0 for rec in cl.records)
+        for i, s in enumerate(summary.replicas):
+            tel.check(s, replica=i)
+
+    def test_crash_of_missing_replica_is_ignored(self, setup,
+                                                 cluster_baseline):
+        cfg, params = setup
+        reqs, tok0 = cluster_baseline
+        inj = FaultInjector(seed=0)
+        inj.schedule_crash(7, 0.01)  # no such replica
+        inj.schedule_crash(1, 0.01)
+        inj.schedule_crash(1, 0.03)  # double-kill: second must be a no-op
+        cl, _, tok1 = _run_cluster(cfg, params, reqs, faults=inj)
+        crashes = [e for _, e in cl.events if isinstance(e, ev.ReplicaCrashed)]
+        assert len(crashes) == 1
+        assert tok1 == tok0
+
+
+class TestChaosProperty:
+    """ISSUE acceptance: ANY seeded fault schedule leaves cluster tokens
+    bitwise-identical to the fault-free run and the ledger conserving."""
+
+    @given(seed=st.integers(0, 2**16),
+           fail_rate=st.floats(0.0, 0.5),
+           corrupt_rate=st.floats(0.0, 0.3),
+           crash_replica=st.integers(0, 1),
+           crash_at=st.floats(0.0, 0.3))
+    @settings(max_examples=5, deadline=None)
+    def test_any_schedule_token_identical_and_conserving(
+            self, setup, cluster_baseline, seed, fail_rate, corrupt_rate,
+            crash_replica, crash_at):
+        cfg, params = setup
+        reqs, tok0 = cluster_baseline
+        tel = Telemetry()
+        inj = FaultInjector(seed=seed, fail_rate=fail_rate,
+                            corrupt_rate=corrupt_rate)
+        inj.add_brownout("host_dram", crash_at, crash_at + 0.05)
+        inj.schedule_crash(crash_replica, crash_at)
+        cl, summary, tok1 = _run_cluster(
+            cfg, params, reqs, faults=inj,
+            retry=RetryPolicy(max_attempts=2), tel=tel,
+        )
+        assert tok1 == tok0
+        for i, s in enumerate(summary.replicas):
+            tel.check(s, replica=i)

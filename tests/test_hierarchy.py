@@ -695,6 +695,7 @@ def test_engine_migrations_demote_cold_entries_and_audit(llama):
         assert r.ttft_s == pytest.approx(r.queue_s + r.load_s + r.prefill_s)
         assert r.slo_met is True
     summary = audit_mod.slo_summary(rows)
-    assert summary == {"requests": 4, "slo_met": 4, "slo_violated": 0, "no_slo": 0}
+    assert summary == {"requests": 4, "slo_met": 4, "slo_violated": 0,
+                       "no_slo": 0, "degraded": 0}
     table = audit_mod.format_table(rows)
     assert "TTFT" in table and len(table.splitlines()) == 5
