@@ -27,7 +27,16 @@ Reads the two files ``benchmarks/serve_bench.py`` writes and checks:
     happened (rate > 0) with retries observed, every request finished
     token-identical to the fault-free run, the faulted pass cost no more
     than the configured inflation ceiling, and it too compiled nothing
-    during the measured wave.
+    during the measured wave;
+  * flat decode p99 — the unified continuous-batching lane's victim decode
+    p99 token gap stays within 1.2x its steady-state gap while a burst of
+    long-context admissions lands (the legacy lane must spike above that),
+    chunks actually landed, and the measured wave compiled nothing (the
+    mixed launch has ONE static shape);
+  * baseline diff — when the repo's committed ``BENCH_serving.json``
+    (``git show HEAD:...``) was produced by the same workload config, every
+    speedup headline must stay within 25% of it, so silent perf drift
+    trips CI even when the absolute floors still pass.
 
 Exits non-zero on the first violated check with a self-explanatory message.
 """
@@ -152,10 +161,77 @@ def check_chaos(bench: dict, lanes: dict) -> None:
              "injected failures burned no accounted transfer bytes")
 
 
+P99_GAP_CEILING = 1.2  # unified lane: worst decode gap vs steady, at most
+BASELINE_RTOL = 0.25   # committed-baseline drift allowance on speedups
+
+
+def check_unified(bench: dict) -> None:
+    w = bench["workloads"].get("unified")
+    _require(w is not None, "unified lane missing from bench artifact")
+    uni, leg = w["unified"], w["legacy"]
+    _require(uni["p99_gap_ratio"] <= P99_GAP_CEILING,
+             f"unified decode p99 gap x{uni['p99_gap_ratio']:.3f} of steady "
+             f"exceeds the x{P99_GAP_CEILING} flat-p99 ceiling")
+    _require(leg["p99_gap_ratio"] > P99_GAP_CEILING,
+             f"legacy lane no longer spikes (x{leg['p99_gap_ratio']:.3f}) — "
+             f"the unified comparison is vacuous; rescale the workload")
+    _require(uni["jit_misses"] == 0,
+             f"unified measured wave recompiled: {uni}")
+    _require(uni.get("unified_steps", 0) > 0
+             and uni.get("unified_chunk_tokens", 0) > 0,
+             f"unified lane landed no chunks: {uni}")
+    _require(uni["admission_throughput_rps"] > 0.0,
+             f"unified lane admitted nothing: {uni}")
+
+
+def _committed_baseline(path: str):
+    """The committed copy of the bench artifact (``git show HEAD:path``), or
+    None when there is no repo / no committed copy (first run, exported
+    tarball) — the diff is then skipped, not failed."""
+    import subprocess
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"], cwd=root,
+            capture_output=True, text=True, timeout=30,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    if out.returncode != 0:
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def check_baseline(bench: dict, baseline) -> str:
+    """Diff the fresh bench numbers against the committed baseline.  Only
+    meaningful when both runs used the same workload config (CI always
+    does); a config mismatch or a missing baseline skips with a notice."""
+    if baseline is None:
+        return "baseline: none committed, diff skipped"
+    if baseline.get("config") != bench.get("config"):
+        return "baseline: workload config differs, diff skipped"
+    missing = set(baseline["speedup"]) - set(bench["speedup"])
+    _require(not missing,
+             f"speedup headlines vanished vs committed baseline: {missing}")
+    for key, old in baseline["speedup"].items():
+        new = bench["speedup"][key]
+        _require(abs(new - old) <= BASELINE_RTOL * abs(old),
+                 f"speedup[{key}] drifted {old:.3f} -> {new:.3f} "
+                 f"(> {BASELINE_RTOL:.0%} vs committed baseline)")
+    return f"baseline: {len(baseline['speedup'])} headlines within " \
+           f"{BASELINE_RTOL:.0%}"
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bench", default="BENCH_serving.json")
     ap.add_argument("--metrics", default="BENCH_serving_metrics.json")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="skip the committed-baseline drift diff")
     args = ap.parse_args()
 
     bench = json.loads(pathlib.Path(args.bench).read_text())
@@ -170,6 +246,11 @@ def main() -> int:
         check_steady_state(bench, lanes)
         check_conservation(lanes)
         check_chaos(bench, lanes)
+        check_unified(bench)
+        base_note = (
+            "baseline: diff disabled" if args.no_baseline
+            else check_baseline(bench, _committed_baseline(args.bench))
+        )
     except GateError as e:
         print(f"check_snapshot: FAIL — {e}", file=sys.stderr)
         return 1
@@ -177,15 +258,18 @@ def main() -> int:
     sp = bench["speedup"]
     aff = bench["workloads"]["cluster"]["affinity"]
     h = bench["workloads"]["chaos"]
+    uni = bench["workloads"]["unified"]["unified"]
     print(
         f"check_snapshot: OK — burst {sp['burst']:.2f}x, "
         f"decode {sp['decode_tokens_per_s']:.2f}x, "
         f"rag {sp['rag_prefill']:.2f}x, "
         f"affinity hit rate {aff['hit_rate']:.3f}, "
+        f"unified p99 gap x{uni['p99_gap_ratio']:.3f} <= x{P99_GAP_CEILING}, "
         f"0 steady recompiles, conservation <= {ATOL} on "
         f"{len(lanes)} telemetry lanes, chaos token-identical "
         f"({h['degraded_requests']} degraded, "
-        f"cost x{h['cost_inflation']:.2f} <= x{h['cost_ceiling']:.1f})"
+        f"cost x{h['cost_inflation']:.2f} <= x{h['cost_ceiling']:.1f}); "
+        f"{base_note}"
     )
     return 0
 

@@ -231,6 +231,132 @@ def _serve_decode(cfg, params, *, n, slots, cost_arch, paged, seed):
     return out, {r.req_id: r.tokens for r in records}
 
 
+# Unified-lane workload shape: one long-generation victim decoding alone,
+# then a burst of LONG-context recompute admissions landing mid-decode.
+# Legacy admit-OR-decode stalls the victim for the burst's full packed
+# prefill; the unified step lands the burst as co-scheduled chunks, so the
+# victim's worst token gap stays within the flat-p99 envelope.  This lane
+# models a TENSOR-PARALLEL serving instance (V100_X4, mfu 0.40) instead of
+# the paper's naive-MP V100_X4_HF pipeline: with one-of-four GPUs active,
+# any prefill flops dwarf a (memory-bound) decode step and no chunk size
+# can interleave flatly — co-scheduling presumes serving-grade compute.
+UNIFIED_CTX = 352          # burst context length (tokens, recompute-planned)
+UNIFIED_VICTIM_NEW = 48    # victim generation length (47 measured gaps)
+UNIFIED_BURST_AT = 0.02    # burst arrival: a few decode steps into the wave
+UNIFIED_MAX_LEN = 512
+UNIFIED_GAP_TARGET = 1.15  # budget solve target: under the 1.2x CI ceiling
+
+
+def _flat_step_budget(pm, cost_cfg):
+    """Largest per-launch token budget whose fully-granted mixed step stays
+    within UNIFIED_GAP_TARGET of a one-row decode step, solved against the
+    lane's own cost model — the budget is a hardware property, not a magic
+    number.  Worst case assumed: one decode row plus one chunk ending at
+    the burst's deepest position."""
+    base = pm.t_decode_paged(cost_cfg, [64 + 8 + UNIFIED_VICTIM_NEW])
+    g = 8
+    while g + 8 <= UNIFIED_MAX_LEN and (
+        pm.t_step_unified(
+            cost_cfg, [64 + 8 + UNIFIED_VICTIM_NEW],
+            [(g + 8, UNIFIED_CTX + 8)],
+        )
+        <= UNIFIED_GAP_TARGET * base
+    ):
+        g += 8
+    return 1 + g  # the victim's decode row rides inside the budget too
+
+
+def _serve_unified_lane(cfg, params, *, n, cost_arch, seed, unified):
+    """Burst + in-flight decode under the unified continuous-batching step
+    (vs the legacy admit-OR-decode loop): measure the victim's decode token
+    gaps around the burst and the burst's admission throughput.  A same-shape
+    warmup wave runs first on the same engine, so any compile inside the
+    measured wave is a steady-state recompile (must be zero — the unified
+    launch has ONE static shape)."""
+    import jax  # noqa: F401
+
+    from repro.configs import get_config
+    from repro.core.perf_model import PerfModel, V100_X4
+    from repro.core.pricing import AWS_PAPER
+    from repro.serving import AlwaysReusePlanner, EngineConfig, Request, ServingEngine
+    from repro.serving import events as evmod
+
+    pm = PerfModel(V100_X4)
+    budget = _flat_step_budget(pm, get_config(cost_arch))
+    rng = np.random.default_rng(seed)
+
+    def wave(base_id, t0):
+        mk_ctx = lambda L: list(map(int, rng.integers(0, cfg.vocab, L)))  # noqa: E731
+        mk_prompt = lambda: list(map(int, rng.integers(0, cfg.vocab, 8)))  # noqa: E731
+        reqs = [dict(
+            req_id=base_id, context_tokens=mk_ctx(64),
+            prompt_tokens=mk_prompt(), max_new_tokens=UNIFIED_VICTIM_NEW,
+            arrival_s=t0,
+        )]
+        reqs += [dict(
+            req_id=base_id + 1 + i, context_tokens=mk_ctx(UNIFIED_CTX),
+            prompt_tokens=mk_prompt(), max_new_tokens=2,
+            arrival_s=t0 + UNIFIED_BURST_AT,
+        ) for i in range(n)]
+        return reqs
+
+    ec = EngineConfig(
+        max_slots=n + 1, max_len=UNIFIED_MAX_LEN, chunk_tokens=16,
+        cost_arch=cost_arch, paged_decode=True, unified_step=unified,
+        step_token_budget=budget,
+        reuse_enabled=False,  # pure recompute burst: the prefill IS the load
+    )
+    eng = ServingEngine(
+        cfg, params, engine_cfg=ec, planner=AlwaysReusePlanner(),
+        pricing=AWS_PAPER, perf=pm,
+    )
+    for r in wave(0, 0.0):
+        eng.submit(Request(**r))
+    eng.run()  # warmup: compiles every launch shape
+    t0 = eng.clock.now
+    n_warm = len(eng.records)
+    warm_busy = eng.admission_busy_s
+    warm_jit = (
+        dict(eng.unified_stats()["jit"]) if unified
+        else dict(eng.packed_stats()["jit"])
+    )
+    victim_id = 100
+    for r in wave(victim_id, t0):
+        eng.submit(Request(**r))
+    events = list(eng.drain())
+
+    records = eng.records[n_warm:]
+    burst_records = [r for r in records if r.req_id != victim_id]
+    gaps = np.diff([
+        e.t_s for e in events
+        if isinstance(e, evmod.TokenEmitted) and e.req_id == victim_id
+    ])
+    steady = float(np.median(gaps))
+    p99 = float(np.percentile(gaps, 99))
+    busy = eng.admission_busy_s - warm_busy
+    jit = (
+        eng.unified_stats()["jit"] if unified else eng.packed_stats()["jit"]
+    )
+    out = {
+        "unified": unified,
+        "n_requests": len(records),
+        "step_token_budget": budget,
+        "decode_gap_steady_s": steady,
+        "decode_gap_p99_s": p99,
+        "decode_gap_max_s": float(gaps.max()),
+        "p99_gap_ratio": p99 / max(steady, 1e-12),
+        "admission_busy_s": busy,
+        "admission_throughput_rps": len(burst_records) / max(busy, 1e-12),
+        "mean_ttft_s": float(np.mean([r.ttft_s for r in burst_records])),
+        "jit_misses": jit["misses"] - warm_jit["misses"],
+    }
+    if unified:
+        us = eng.unified_stats()
+        out["unified_steps"] = us["steps"]
+        out["unified_chunk_tokens"] = us["chunk_tokens"]
+    return out, {r.req_id: r.tokens for r in records}
+
+
 # RAG workload shape: every context is ``RAG_CTX_CHUNKS`` document chunks of
 # ``RAG_CHUNK`` tokens drawn from a shared pool, PERMUTED per request — the
 # chain-hash trie sees (at best) a 1-chunk prefix, while the chunk-content
@@ -638,6 +764,7 @@ def run(
     n_decode: int = 32,
     decode_slots: int = 32,
     n_rag: int = 16,
+    n_unified: int = 4,
     n_cluster: int = 24,
     cluster_replicas: int = 2,
     n_chaos: int = 16,
@@ -718,6 +845,21 @@ def run(
     results["speedup"]["decode_tokens_per_s"] = (
         paged_d["decode_tokens_per_s"] / max(dense_d["decode_tokens_per_s"], 1e-12)
     )
+    # unified continuous-batching phase: a long-context burst landing
+    # mid-decode, chunked+co-scheduled vs the legacy admit-OR-decode stall
+    uni, utoks = _serve_unified_lane(
+        cfg, params, n=n_unified, cost_arch=cost_arch, seed=seed,
+        unified=True,
+    )
+    leg, ltoks = _serve_unified_lane(
+        cfg, params, n=n_unified, cost_arch=cost_arch, seed=seed,
+        unified=False,
+    )
+    assert utoks == ltoks, "unified step must be token-identical to legacy"
+    results["workloads"]["unified"] = {"unified": uni, "legacy": leg}
+    results["speedup"]["unified_decode_p99"] = (
+        leg["p99_gap_ratio"] / max(uni["p99_gap_ratio"], 1e-12)
+    )
     # shuffled-chunk RAG phase: fused non-prefix reuse vs full recompute
     rag_f, tel_lane = _serve_rag(cfg, params, n=n_rag, slots=slots,
                                  cost_arch=cost_arch, fused=True, seed=seed,
@@ -765,6 +907,8 @@ def run(
         "n_decode": n_decode, "decode_slots": decode_slots,
         "decode_ctx_lens": DECODE_CTX_LENS,
         "n_rag": n_rag, "rag_chunk": RAG_CHUNK,
+        "n_unified": n_unified, "unified_ctx": UNIFIED_CTX,
+        "unified_victim_new": UNIFIED_VICTIM_NEW,
         "rag_ctx_chunks": RAG_CTX_CHUNKS, "rag_pool": RAG_POOL,
         "n_cluster": n_cluster, "cluster_replicas": cluster_replicas,
         "cluster_ctx_len": CLUSTER_CTX_LEN,
@@ -788,6 +932,9 @@ def main() -> List[str]:
     ap.add_argument("--decode-slots", type=int, default=32)
     ap.add_argument("--rag-requests", type=int, default=16,
                     help="shuffled-chunk RAG workload size")
+    ap.add_argument("--unified-requests", type=int, default=4,
+                    help="unified-lane burst size (long-context admissions "
+                    "landing mid-decode)")
     ap.add_argument("--cluster-requests", type=int, default=24,
                     help="cluster workload size (measured wave)")
     ap.add_argument("--cluster-replicas", type=int, default=2)
@@ -810,6 +957,7 @@ def main() -> List[str]:
         slots=args.slots, arch=args.arch, cost_arch=args.cost_arch,
         n_decode=args.decode_requests, decode_slots=args.decode_slots,
         n_rag=args.rag_requests,
+        n_unified=args.unified_requests,
         n_cluster=args.cluster_requests,
         cluster_replicas=args.cluster_replicas,
         n_chaos=args.chaos_requests,
@@ -829,7 +977,7 @@ def main() -> List[str]:
 
     lines = []
     for name, modes in res["workloads"].items():
-        if name in ("decode", "rag", "cluster", "chaos"):
+        if name in ("decode", "rag", "unified", "cluster", "chaos"):
             continue
         p, s = modes["packed"], modes["single"]
         lines.append(
@@ -845,6 +993,15 @@ def main() -> List[str]:
         f"(shared blocks {d['paged']['shared_block_hits']}) "
         f"vs dense {d['dense']['decode_tokens_per_s']:.1f} tok/s "
         f"-> {res['speedup']['decode_tokens_per_s']:.2f}x"
+    )
+    u = res["workloads"]["unified"]
+    lines.append(
+        f"unified: decode p99 gap x{u['unified']['p99_gap_ratio']:.2f} "
+        f"of steady ({u['unified']['unified_steps']} mixed launches, "
+        f"{u['unified']['unified_chunk_tokens']} chunk tokens, "
+        f"{u['unified']['jit_misses']} steady recompiles) vs legacy "
+        f"x{u['legacy']['p99_gap_ratio']:.2f} -> "
+        f"{res['speedup']['unified_decode_p99']:.2f}x flatter"
     )
     g = res["workloads"]["rag"]
     lines.append(

@@ -1,0 +1,153 @@
+"""Chunked-prefill Pallas kernel: multi-token rows over the shared KV block
+pool — the unified continuous-batching launch.
+
+This is ``paged_decode`` generalised from one query per sequence to a chunk
+of up to ``C`` new tokens per sequence, all attending through the same
+block-table indirection.  One launch therefore serves a MIXED batch: decode
+rows (1 valid token at the live length), prefill-chunk rows (up to ``C``
+block-aligned new tokens whose K/V the caller has already scattered into the
+pool), and idle rows (all padding).  That mix is what lets the serving
+engine interleave long suffix-prefills with in-flight decode instead of
+stalling decode behind admission (Sarathi-style chunked prefill).
+
+Grid (B, KV, nb) exactly as in ``paged_decode``: the block table rides in as
+a scalar-prefetch operand so the k/v BlockSpec index maps DMA pool block
+``table[b, j]`` directly, and the G grouped query heads of a KV head are
+processed together.  The flash running softmax in VMEM scratch simply gains
+a leading chunk axis ([C, G] stats, [C, G, hd] accumulator).  Validity is
+purely positional per query: row ``r`` of table entry ``j`` holds sequence
+position ``j*block + r``, so ``pos <= q_pos[c]`` covers causality within the
+chunk, the boundary block's tail, AND 0-padded table entries (dump-block
+positions exceed every valid query); padding queries (``q_pos`` = -2^30)
+mask every key and emit zeros.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_prefill import _scratch
+
+NEG_INF = -1e30
+
+
+def supported(q, k_pool, v_pool, block: int) -> bool:
+    B, C, H, hd = q.shape
+    KV = k_pool.shape[1]
+    return (
+        C >= 1
+        and C <= block
+        and H % KV == 0
+        and hd <= 256
+        and k_pool.shape[0] % block == 0
+        and q.dtype in (jnp.float32, jnp.bfloat16)
+    )
+
+
+def _kernel(
+    tbl_ref,  # scalar-prefetch: [B, nb] int32
+    q_ref, k_ref, v_ref, qp_ref,  # inputs
+    o_ref,  # output
+    m_ref, l_ref, acc_ref,  # scratch
+    *, nb: int, block: int, chunk: int, window: Optional[int], scale: float,
+):
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    C, G, hd = chunk, q_ref.shape[3], q_ref.shape[4]
+    qg = q_ref[0, 0].astype(jnp.float32).reshape(C * G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # [block, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    qp = qp_ref[0].astype(jnp.int32)  # [C]
+
+    s = jax.lax.dot_general(
+        qg, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).reshape(C, G, block) * scale
+
+    # sequence position of each row of this table entry (by construction)
+    kp = ib * block + jax.lax.broadcasted_iota(jnp.int32, (C, block), 1)
+    mask = kp <= qp[:, None]  # [C, block]
+    if window is not None:
+        mask &= kp > qp[:, None] - window
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]  # [C, G]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask[:, None, :], jnp.exp(s - m_new[..., None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jax.lax.dot_general(
+        p.reshape(C * G, block), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(C, G, hd)
+    m_ref[...] = m_new
+
+    @pl.when(ib == nb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "window", "interpret")
+)
+def chunked_prefill_attention(
+    q: jax.Array,  # [B, C, H, hd]
+    k_pool: jax.Array,  # [N_rows, KV, hd] (N_rows = n_blocks * block)
+    v_pool: jax.Array,
+    *,
+    block_table: jax.Array,  # [B, nb] int32
+    q_pos: jax.Array,  # [B, C] (-2^30 padding)
+    block: int = 128,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, C, H, hd = q.shape
+    KV = k_pool.shape[1]
+    G = H // KV
+    nb = block_table.shape[1]
+
+    kb = k_pool.reshape(-1, block, KV, hd)  # [n_blocks, block, KV, hd]
+    vb = v_pool.reshape(-1, block, KV, hd)
+    # [B, C, H, hd] -> [B, KV, C, G, hd]: one grid step covers a KV head
+    # group across the whole chunk.
+    qg = q.reshape(B, C, KV, G, hd).transpose(0, 2, 1, 3, 4)
+    tbl = block_table.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _kernel, nb=nb, block=block, chunk=C, window=window,
+        scale=1.0 / (hd**0.5),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, C, G, hd), lambda b, h, ib, t: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, block, 1, hd), lambda b, h, ib, t: (t[b, ib], 0, h, 0)),
+            pl.BlockSpec((1, block, 1, hd), lambda b, h, ib, t: (t[b, ib], 0, h, 0)),
+            pl.BlockSpec((1, C), lambda b, h, ib, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C, G, hd), lambda b, h, ib, t: (b, h, 0, 0, 0)),
+        scratch_shapes=[
+            _scratch((C, G), jnp.float32),
+            _scratch((C, G), jnp.float32),
+            _scratch((C, G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, C, G, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, qg, kb, vb, q_pos)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, C, H, hd)

@@ -208,6 +208,35 @@ def paged_decode(
     )
 
 
+def chunked_prefill(
+    q: jax.Array,  # [B, C, H, hd] — up to C new tokens per sequence
+    k_pool: jax.Array,  # [N_rows, KV, hd] — shared block pool, flat rows
+    v_pool: jax.Array,
+    *,
+    block_table: jax.Array,  # [B, nb] int32 pool-block id per sequence block
+    q_pos: jax.Array,  # [B, C] (-2^30 padding)
+    block: int = 128,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Chunked-prefill attention over the shared block pool — the unified
+    continuous-batching launch mixing prefill-chunk rows with decode rows.
+    See ``ref.chunked_prefill_ref`` for semantics and the bit-exactness
+    contract vs dense suffix prefill."""
+    use_pallas, interpret = _use_pallas()
+    if use_pallas:
+        from repro.kernels import chunked_prefill as cpk
+
+        if cpk.supported(q, k_pool, v_pool, block):
+            return cpk.chunked_prefill_attention(
+                q, k_pool, v_pool, block_table=block_table, q_pos=q_pos,
+                block=block, window=window, interpret=interpret,
+            )
+    return ref.chunked_prefill_ref(
+        q, k_pool, v_pool, block_table=block_table, q_pos=q_pos, block=block,
+        window=window,
+    )
+
+
 # --------------------------------------------------------------------------- #
 # KV-sequence-sharded flash attention (shard_map over the model axis)
 # --------------------------------------------------------------------------- #

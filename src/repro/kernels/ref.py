@@ -230,6 +230,50 @@ def paged_decode_ref(
     )
 
 
+def chunked_prefill_ref(
+    q: jax.Array,  # [B, C, H, hd] — up to C new tokens per sequence (a chunk)
+    k_pool: jax.Array,  # [N_rows, KV, hd] — the SHARED block pool, flat rows
+    v_pool: jax.Array,  # [N_rows, KV, hd]
+    *,
+    block_table: jax.Array,  # [B, nb] int32 pool-block id per sequence block
+    q_pos: jax.Array,  # [B, C] positions of the chunk tokens (-2^30 padding)
+    block: int = 128,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Chunked-prefill attention over a paged KV layout: the multi-query
+    generalisation of ``paged_decode_ref``.  Each row carries a chunk of up
+    to ``C`` new tokens whose K/V have already been scattered into the pool
+    blocks named by ``block_table`` (the caller lands the chunk before
+    attending), so every query at position ``p`` attends exactly the pool
+    rows at sequence positions ``[0, p]`` — its reused/previously-landed
+    context plus the chunk's own causal prefix.  A decode row is the C=1
+    degenerate case (one valid query at the live length); an idle row is all
+    padding (``q_pos`` = -2^30 masks every key, output 0).  Validity is
+    purely positional: rows past the last valid query (boundary-block tail,
+    0-padded table entries pointing at the reserved dump block) carry
+    positions exceeding every query's and mask out causally — bit-identical
+    to dense suffix prefill over the same context, the contract
+    ``tests/test_chunked_prefill.py`` pins at every level.
+    """
+    B, C = q.shape[0], q.shape[1]
+    nb = block_table.shape[1]
+    rows = (
+        block_table[:, :, None].astype(jnp.int32) * block
+        + jnp.arange(block, dtype=jnp.int32)[None, None, :]
+    ).reshape(B, nb * block)
+    k = k_pool[rows]  # [B, nb*block, KV, hd]
+    v = v_pool[rows]
+    # Row r of table entry j holds sequence position j*block + r; the causal
+    # mask (kv <= q_pos) is the entire validity rule, exactly as the Pallas
+    # kernel computes it.
+    kv_pos = jnp.broadcast_to(
+        jnp.arange(nb * block, dtype=jnp.int32)[None], (B, nb * block)
+    )
+    return attention_ref(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True, window=window
+    )
+
+
 def causal_positions(batch: int, seq: int, offset=0) -> jax.Array:
     """[B, S] positions ``offset + arange(S)``; offset scalar or [B]."""
     pos = jnp.arange(seq, dtype=jnp.int32)[None, :]

@@ -316,6 +316,54 @@ def decode_paged(
 
 
 # --------------------------------------------------------------------------- #
+# Chunked prefill (mixed prefill-chunk + decode rows over the block pool)
+# --------------------------------------------------------------------------- #
+def prefill_chunked(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # [B, C, D] — up to C new tokens per sequence
+    pool: KVCache,  # k/v: [N_rows, KV, hd] — the SHARED block pool, flat rows
+    block_table: jax.Array,  # [B, nb] int32 pool-block id per sequence block
+    q_pos: jax.Array,  # [B, C] int32 token positions (-2^30 = padding)
+    *,
+    block: int,
+) -> Tuple[jax.Array, KVCache]:
+    """``decode_paged`` generalised to a chunk of up to ``C`` tokens per
+    sequence — the unified continuous-batching step.  Each valid token's K/V
+    rows scatter into the pool at ``table[pos // block] * block + pos %
+    block``; padding tokens write onto the reserved dump block's row 0 (their
+    rope positions are clamped to 0 first, so only garbage lands there and
+    dump rows are never attended — positions exceed every valid query).  One
+    launch mixes decode rows (1 valid token), prefill-chunk rows (many) and
+    idle rows (none); numerics per row are bit-identical to dense suffix
+    prefill / ``decode`` (tests/test_chunked_prefill.py).
+    """
+    B, C, _ = x.shape
+    q, k_new, v_new = _qkv(p, cfg, x)
+    valid = q_pos >= 0  # [B, C]
+    positions = jnp.where(valid, q_pos, 0).astype(jnp.int32)
+    if cfg.rope_theta is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    blk = jnp.take_along_axis(
+        block_table.astype(jnp.int32), positions // block, axis=1
+    )  # [B, C]
+    rows = jnp.where(valid, blk * block + positions % block, 0)  # 0 = dump row
+    KVh, hd = pool.k.shape[1], pool.k.shape[2]
+    rows_flat = rows.reshape(B * C)
+    pool = KVCache(
+        pool.k.at[rows_flat].set(k_new.reshape(B * C, KVh, hd)),
+        pool.v.at[rows_flat].set(v_new.reshape(B * C, KVh, hd)),
+    )
+    o = ops.chunked_prefill(
+        q, pool.k, pool.v, block_table=block_table, q_pos=q_pos,
+        block=block, window=cfg.sliding_window,
+    )
+    return _out(p, o), pool
+
+
+# --------------------------------------------------------------------------- #
 # Cross-attention (Whisper decoder): KV computed once from encoder output
 # --------------------------------------------------------------------------- #
 def init_cross_attention(key: jax.Array, cfg: ArchConfig) -> Params:

@@ -176,6 +176,30 @@ def prefill_fused(
     return x, BlockCache(kv, None), aux
 
 
+def prefill_chunked(
+    p: Params,
+    cfg: ArchConfig,
+    kind: BlockKind,
+    x: jax.Array,  # [B, C, D]
+    cache: BlockCache,  # shared block-pool KV buffer (mixer must be "a")
+    block_table: jax.Array,  # [B, nb]
+    q_pos: jax.Array,  # [B, C]
+    *,
+    block: int,
+) -> Tuple[jax.Array, BlockCache, jax.Array]:
+    """Chunked prefill of one block over the pool — attention mixers only
+    (SSM state mixes along the sequence, so chunk interleaving cannot skip
+    ahead there; those archs keep the legacy admit-then-decode path)."""
+    assert kind.mixer == "a", "chunked prefill requires an attention mixer"
+    h = layers.apply_norm(p["norm1"], cfg, x)
+    out, kv = attention.prefill_chunked(
+        p["attn"], cfg, h, cache.attn, block_table, q_pos, block=block
+    )
+    x = x + out
+    x, aux = _apply_ffn(p, cfg, kind, x)
+    return x, BlockCache(kv, None), aux
+
+
 def decode_paged(
     p: Params,
     cfg: ArchConfig,

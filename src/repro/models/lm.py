@@ -335,6 +335,58 @@ def decode_paged(
 
 
 # --------------------------------------------------------------------------- #
+# Chunked prefill (mixed prefill-chunk + decode rows over the block pool)
+# --------------------------------------------------------------------------- #
+def prefill_chunked(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,  # [B, C] — up to C new tokens per slot (0 on padding)
+    caches: Tuple[blocks.BlockCache, ...],  # pool buffers (paged.init_pool_caches)
+    *,
+    block_table: jax.Array,  # [B, nb] int32 pool-block ids per sequence block
+    q_pos: jax.Array,  # [B, C] int32 token positions (-2^30 = padding)
+    last_idx: jax.Array,  # [B] chunk index of each row's last valid token
+    block: int = 128,
+) -> Tuple[jax.Array, Tuple[blocks.BlockCache, ...]]:
+    """The unified continuous-batching step: ONE launch over the shared
+    block pool whose rows mix prefill chunks (up to ``C`` new suffix tokens
+    each), decode rows (1 token at the live length) and idle rows (all
+    padding).  Every valid token's KV lands in the pool blocks its slot's
+    table names (``attention.prefill_chunked``), then attends causally at
+    its absolute position — per-row numerics are bit-identical to the
+    legacy suffix-prefill / paged-decode launches.  Returns per-row logits
+    ``[B, V]`` gathered at ``last_idx`` (meaningful only for rows whose
+    chunk completes a prefill or carries a decode token) and the updated
+    pool buffers.  Static shapes ([B, C] tokens, [B, nb] tables) make the
+    launch compile once per (C, nb) bucket — zero steady-state recompiles.
+    """
+    kinds, _ = _layout(cfg)
+    assert all(k.mixer == "a" for k in kinds), (
+        "chunked prefill requires attention-only stacks", cfg.name)
+    x = _embed_inputs(params, cfg, tokens, None)
+
+    def period_fn(x, per):
+        layer_params, caches_ = per
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            x, c, _ = blocks.prefill_chunked(
+                layer_params[i], cfg, kind, x, caches_[i], block_table, q_pos,
+                block=block,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        _remat(cfg, period_fn), x, (tuple(params["layers"]), caches),
+        unroll=cfg.scan_unroll,
+    )
+    x = jnp.take_along_axis(x, last_idx.astype(jnp.int32)[:, None, None], axis=1)
+    x = layers.apply_norm(params["final_norm"], cfg, x)
+    logits = layers.lm_logits(params["embed"], cfg, x)[:, 0]  # [B, V]
+    return logits, new_caches
+
+
+# --------------------------------------------------------------------------- #
 # Loss
 # --------------------------------------------------------------------------- #
 def cross_entropy(

@@ -32,6 +32,12 @@ class ModelApi(NamedTuple):
       chunk-composite KV assembly (kvcache/fusion.py, CacheBlend-style
       non-prefix reuse); None for families that cannot fuse (enc-dec;
       SSM/hybrid stacks assert inside lm.prefill_fused).
+    * prefill_chunked(params, cfg, tokens, caches, block_table=, q_pos=,
+      last_idx=, block=) -> (logits, caches) — the unified
+      continuous-batching step: ONE launch over the shared block pool whose
+      rows mix prefill chunks, decode tokens and idle padding; None for
+      families that cannot page (enc-dec; SSM/hybrid stacks assert inside
+      lm.prefill_chunked).
     """
 
     init: Callable[..., Any]
@@ -42,6 +48,7 @@ class ModelApi(NamedTuple):
     prefill_packed: Optional[Callable[..., Any]] = None
     decode_paged: Optional[Callable[..., Any]] = None
     prefill_fused: Optional[Callable[..., Any]] = None
+    prefill_chunked: Optional[Callable[..., Any]] = None
 
 
 def get_model(cfg: ArchConfig) -> ModelApi:
@@ -62,6 +69,7 @@ def get_model(cfg: ArchConfig) -> ModelApi:
         prefill_packed=lm.prefill_packed,
         decode_paged=lm.decode_paged,
         prefill_fused=lm.prefill_fused,
+        prefill_chunked=lm.prefill_chunked,
     )
 
 

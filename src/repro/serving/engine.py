@@ -139,6 +139,24 @@ class EngineConfig:
     # composite field entirely.  Packable attention archs only (assembled KV
     # needs per-position state); others never see a composite match.
     fusion_enabled: bool = False
+    # Unified continuous-batching step (Sarathi-style chunked prefill): one
+    # launch per step whose rows mix in-flight decode tokens with kv_block-
+    # wide chunks of pending suffix-prefills, all over the shared block pool
+    # (kernels/chunked_prefill.py).  Admissions stop monopolizing the device:
+    # a long prefill lands incrementally while decodes keep stepping, so
+    # burst arrivals no longer spike in-flight decode token gaps.  Requires
+    # paged_decode and a packable arch; off by default — the seed golden
+    # trace replays untouched (serve_bench's unified lane flips it on).
+    unified_step: bool = False
+    # Per-launch q-token quota for the unified step: decode rows always ride
+    # (one token each), the remainder is granted to ready prefill chunks in
+    # slot order.  Bounds the compute any single step can add on top of pure
+    # decode — the knob behind the flat-decode-p99 CI gate.  160 keeps a
+    # fully-granted mixed launch within ~1.17x of a pure decode step under
+    # the default TPU-v5e(8) cost model (the gate's envelope is 1.2x);
+    # compute-poorer hardware needs a smaller budget — serve_bench's unified
+    # lane solves for it against its own PerfModel (_flat_step_budget).
+    step_token_budget: int = 160
     # Seeded fault injection (kvcache/faults.FaultInjector): every storage
     # backend consults it for transient failures / brownouts / corruption,
     # and a ServingCluster for scheduled replica crashes.  None (default) =
@@ -169,6 +187,29 @@ class _Admission:
     # fused admissions: source entries pinned between plan and execute (a
     # batch-mate's write-back pressure must not evict a fusion source)
     pins: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _ChunkStream:
+    """One admission's pending suffix-prefill under the unified step: the
+    q-token stream still to land (context tail + prompt; for fused plans the
+    recompute spans + prompt) with each token's absolute target position.
+    The slot's pool blocks are fully admitted up front; chunks of up to
+    kv_block tokens land per unified launch until the stream drains, at
+    which point the first generated token is emitted and the slot activates
+    for decode."""
+
+    a: _Admission
+    tokens: np.ndarray  # int32 [n_q] q tokens still to prefill
+    positions: np.ndarray  # int32 [n_q] absolute positions, increasing
+    n_ctx: int  # context length (write-back row count)
+    ready_s: float  # clock time the storage fetch completes
+    store_after: bool = False  # write context rows back on completion
+    done: int = 0  # tokens already landed
+
+    @property
+    def remaining(self) -> int:
+        return len(self.tokens) - self.done
 
 
 class ServingEngine:
@@ -322,6 +363,27 @@ class ServingEngine:
             and self._jit_fused is not None
         )
         self.fused_jit = JitBucketStats()
+        # Unified continuous-batching step: chunked prefill interleaved with
+        # decode in one static-shape launch over the block pool.
+        self._jit_chunked = (
+            jax.jit(self._chunked_prefill_impl)
+            if self.api.prefill_chunked is not None
+            else None
+        )
+        self._unified_on = (
+            self.ec.unified_step
+            and self._paged_on
+            and self._jit_chunked is not None
+        )
+        # slot index -> in-flight prefill stream (unified mode only)
+        self._chunks: Dict[int, _ChunkStream] = {}
+        # context-token tuples an unfinished chunk stream will write back:
+        # the unified analogue of the packed batch's write-back dedup
+        self._wb_inflight: Dict[tuple, int] = {}
+        self.unified_jit = JitBucketStats()
+        self.unified_steps = 0  # mixed (chunk-carrying) launches
+        self.unified_chunk_tokens = 0  # prefill tokens landed via chunks
+        self.unified_busy_s = 0.0  # modeled time in mixed launches
         self.fused_admissions = 0
         self.fused_reused_tokens = 0
         self.fused_recompute_tokens = 0
@@ -381,6 +443,17 @@ class ServingEngine:
             block_table=tables, pos=pos, block=self.ec.kv_block,
         )
 
+    def _chunked_prefill_impl(self, params, tokens, caches, tables, q_pos, last_idx):
+        # the unified step's mixed launch: every row is a [C]-token window —
+        # a prefill chunk, a decode token at index 0, or all padding.  All
+        # shapes are static ([B, C] tokens, [B, nb] tables), so steady
+        # unified serving compiles exactly once.
+        return self.api.prefill_chunked(
+            params, self.cfg, tokens, caches,
+            block_table=tables, q_pos=q_pos, last_idx=last_idx,
+            block=self.ec.kv_block,
+        )
+
     # ------------------------------------------------------------------ #
     # Public API: submit / step / drain / run
     # ------------------------------------------------------------------ #
@@ -389,13 +462,21 @@ class ServingEngine:
 
     @property
     def idle(self) -> bool:
-        """Nothing queued and nothing decoding."""
-        return len(self.queue) == 0 and not any(s.active for s in self.slots)
+        """Nothing queued, nothing decoding, no prefill chunks in flight."""
+        return (
+            len(self.queue) == 0
+            and not any(s.active for s in self.slots)
+            and not self._chunks
+        )
 
     def load(self) -> int:
-        """Requests this replica currently owes work to (queued + in a slot)
-        — the router's load signal."""
-        return len(self.queue) + sum(1 for s in self.slots if s.active)
+        """Requests this replica currently owes work to (queued + in a slot,
+        including slots mid-chunked-prefill) — the router's load signal."""
+        return (
+            len(self.queue)
+            + sum(1 for s in self.slots if s.active)
+            + len(self._chunks)
+        )
 
     def free_capacity(self) -> int:
         """Slots not yet spoken for by queued or active requests (floor 0)."""
@@ -414,6 +495,8 @@ class ServingEngine:
         return events
 
     def _step(self) -> List[ev.Event]:
+        if self._unified_on:
+            return self._step_unified()
         events: List[ev.Event] = []
         self._run_migrations(events)
         if self._admit_batch(events):
@@ -424,9 +507,25 @@ class ServingEngine:
         nxt = self.queue.next_arrival()
         if nxt is None:
             return events  # fully drained
-        self.clock.at_least(nxt)
-        events.append(ev.ClockAdvanced(t_s=self.clock.now, req_id=-1, to_s=nxt))
+        self._advance_clock(nxt, events)
         return events
+
+    def _advance_clock(self, to_s: float, events: List[ev.Event]) -> None:
+        """Jump the idle clock to ``to_s``, stepping through every migration
+        pass whose scheduled time falls inside the gap.  Each missed pass
+        runs AT its own due time (the clock walks to each crossing before
+        the final jump), so a diurnal idle gap accrues storage dollars and
+        demotes cold entries on schedule — instead of collapsing all missed
+        passes into one late one at the far edge of the gap."""
+        if self.ec.migration_interval_s > 0 and self.store.migration is not None:
+            while self._next_migration_s <= to_s:
+                at = self._next_migration_s
+                self.clock.at_least(at)
+                self.store.run_migrations()
+                self._next_migration_s = at + self.ec.migration_interval_s
+                self._emit_migrations(events)
+        self.clock.at_least(to_s)
+        events.append(ev.ClockAdvanced(t_s=self.clock.now, req_id=-1, to_s=to_s))
 
     def drain(self) -> Iterator[ev.Event]:
         """Iterate events until every submitted request has finished."""
@@ -770,40 +869,15 @@ class ServingEngine:
         req, schedule = a.req, a.plan.fused
         ctx, prompt = list(req.context_tokens), list(req.prompt_tokens)
 
-        sources: Dict[str, Any] = {}
-        delays: List[float] = []
-        fetched: List[tuple] = []  # (tier, nbytes, delay, rows) per source
-        wasted_total = 0.0
-        for eid, rows in schedule.rows_by_entry().items():
-            e = self.store.entries[eid]  # pinned at plan time: must exist
-            nbytes = self._entry_fetch_bytes(e, rows)
-            override = nbytes if self.cost_cfg is not self.cfg else None
-
-            def attempt(activity, eid=eid, e=e, rows=rows, override=override):
-                with self._attr(activity, req.req_id):
-                    return self.store.fetch(
-                        eid, fraction=rows / max(e.n_tokens, 1), nbytes=override
-                    )
-
-            out, wasted, attempts = self._retry_fetch(
-                req, tier=e.tier, entry_id=eid, matched=rows, nbytes=nbytes,
-                attempt_fn=attempt, events=events,
-            )
-            wasted_total += wasted
-            if out is None:
-                # one lost source spoils the composite: the whole fused
-                # admission degrades to exact recompute (time already burned
-                # on earlier sources rides along)
-                self._degrade_fused(a, wasted_total, attempts, e.tier, eid, events)
-                return
-            art, delay = out
-            sources[eid] = art
-            delays.append(wasted + delay)
-            fetched.append((e.tier, nbytes, wasted + delay, rows))
-        for eid in a.pins:
-            self.store.unpin(eid)
-        a.pins.clear()
-        self._release_prefetch(req.req_id)
+        out = self._fetch_fused_sources(a, events)
+        if out is None:
+            # one lost source spoils the composite: the whole fused
+            # admission degrades to exact recompute (time already burned
+            # on earlier sources rides along, on a.delay)
+            self._degrade_fused(a, events)
+            return
+        sources, fetched = out
+        delays = [d for _, _, d, _ in fetched]
 
         layout = fusion.fused_layout(
             schedule, len(prompt),
@@ -892,25 +966,64 @@ class ServingEngine:
         a.rec.compute_cost += self._c_gpu_s * prefill_s
         self._finish_admission(a, int(jnp.argmax(logits[0])), events)
 
-    def _degrade_fused(
-        self, a: "_Admission", wasted_s: float, attempts: int,
-        tier: str, entry_id: str, events: List[ev.Event],
-    ) -> None:
-        """A fused source fetch exhausted its retries: abandon the composite
-        and run the request as one exact full recompute (tokens unchanged —
-        recompute is the ground truth the fusion approximates from)."""
-        req = a.req
+    def _fetch_fused_sources(self, a: "_Admission", events: List[ev.Event]):
+        """Fetch every fused source entry's matched rows (pinned at plan
+        time) under the retry policy.  On success returns ``(sources,
+        fetched)`` — ``sources[entry_id]`` the artifact, ``fetched`` one
+        (tier, nbytes, delay_s, rows) tuple per source — with pins and the
+        prefetch released.  On exhaustion of any source, degrades the
+        admission in place (record marked, DegradedToRecompute emitted, the
+        burned time left on ``a.delay``) and returns None: the caller falls
+        back to exact recompute, so tokens match the fault-free run."""
+        req, schedule = a.req, a.plan.fused
+        sources: Dict[str, Any] = {}
+        fetched: List[tuple] = []  # (tier, nbytes, delay, rows) per source
+        wasted_total = 0.0
+        for eid, rows in schedule.rows_by_entry().items():
+            e = self.store.entries[eid]  # pinned at plan time: must exist
+            nbytes = self._entry_fetch_bytes(e, rows)
+            override = nbytes if self.cost_cfg is not self.cfg else None
+
+            def attempt(activity, eid=eid, e=e, rows=rows, override=override):
+                with self._attr(activity, req.req_id):
+                    return self.store.fetch(
+                        eid, fraction=rows / max(e.n_tokens, 1), nbytes=override
+                    )
+
+            out, wasted, attempts = self._retry_fetch(
+                req, tier=e.tier, entry_id=eid, matched=rows, nbytes=nbytes,
+                attempt_fn=attempt, events=events,
+            )
+            wasted_total += wasted
+            if out is None:
+                for pid in a.pins:
+                    self.store.unpin(pid)
+                a.pins.clear()
+                self._release_prefetch(req.req_id)
+                self.degraded_requests += 1
+                a.rec.degraded = True
+                a.delay = wasted_total
+                events.append(ev.DegradedToRecompute(
+                    t_s=self.clock.now, req_id=req.req_id, tier=e.tier,
+                    entry_id=eid, attempts=attempts, wasted_s=wasted_total,
+                    reason="fused_source_failed",
+                ))
+                return None
+            art, delay = out
+            sources[eid] = art
+            fetched.append((e.tier, nbytes, wasted + delay, rows))
         for eid in a.pins:
             self.store.unpin(eid)
         a.pins.clear()
         self._release_prefetch(req.req_id)
-        self.degraded_requests += 1
-        a.rec.degraded = True
-        events.append(ev.DegradedToRecompute(
-            t_s=self.clock.now, req_id=req.req_id, tier=tier,
-            entry_id=entry_id, attempts=attempts, wasted_s=wasted_s,
-            reason="fused_source_failed",
-        ))
+        return sources, fetched
+
+    def _degrade_fused(self, a: "_Admission", events: List[ev.Event]) -> None:
+        """A fused source fetch exhausted its retries (record already marked
+        by ``_fetch_fused_sources``, burned time on ``a.delay``): run the
+        request as one exact full recompute (tokens unchanged — recompute is
+        the ground truth the fusion approximates from)."""
+        req, wasted_s = a.req, a.delay
         prefill_s, logits, temp = self._execute_recompute(req, a.plan, events)
         if self._paged_on:
             self._land_state_in_pool(a.slot, temp)
@@ -1436,6 +1549,364 @@ class ServingEngine:
         return self.store.tier_order[-1]  # cloud tier (paper's EBS)
 
     # ------------------------------------------------------------------ #
+    # Unified continuous-batching step (chunked prefill + decode)
+    # ------------------------------------------------------------------ #
+    def _step_unified(self) -> List[ev.Event]:
+        """One unified scheduling step: intake admissible requests as chunk
+        streams (plan + fetch + pool-block admission, no compute yet), then
+        launch — decode rows co-scheduled with every ready prefill chunk in
+        ONE kernel over the block pool.  Admission never monopolizes the
+        device: a long suffix-prefill lands kv_block tokens at a time while
+        in-flight decodes keep stepping in the same launches."""
+        events: List[ev.Event] = []
+        self._run_migrations(events)
+        admitted = self._unified_intake(events)
+        if self._unified_launch(events) or admitted:
+            return events
+        # idle: jump to the next actionable instant — the next arrival
+        # (only if a slot could take it) or the earliest fetch completion.
+        targets = [
+            c.ready_s for c in self._chunks.values() if c.ready_s > self.clock.now
+        ]
+        nxt = self.queue.next_arrival()
+        if nxt is not None and nxt > self.clock.now:
+            targets.append(nxt)
+        if not targets:
+            return events  # fully drained
+        self._advance_clock(min(targets), events)
+        return events
+
+    def _unified_intake(self, events: List[ev.Event]) -> bool:
+        """Admit every admissible request with a free slot as a pending
+        chunk stream: plan, execute the storage fetch (its delay becomes the
+        stream's ready time — loads overlap other slots' compute for free),
+        admit the slot's pool blocks up front and land any reused rows.
+        No prefill compute happens here; chunks land in subsequent unified
+        launches.  Requests the pool cannot carry (embeds) fall back to the
+        legacy per-request admission."""
+        free = [
+            s for s in self.slots
+            if not s.active and s.index not in self._chunks
+        ]
+        if not free:
+            return False
+        limit = min(len(free), self.ec.admit_batch or self.ec.max_slots)
+        pending: Dict[str, List[float]] = {}
+        admitted = False
+        n = 0
+        while n < limit:
+            nxt = self.queue.peek_next(self.clock.now)
+            if nxt is None:
+                break
+            slot = free[n]
+            req = self.queue.pop_admissible(self.clock.now)
+            if req.embeds is not None:
+                self._admit_single(req, slot, events)
+                n += 1
+                admitted = True
+                continue
+            a = self._plan_admission(req, slot, events, pending=pending)
+            if a.plan.action == "fused":
+                for eid in a.plan.fused.source_entries:
+                    if eid in self.store.entries:
+                        self.store.pin(eid)
+                        a.pins.append(eid)
+                for tier, b in a.lookup.fused_bytes_by_tier.items():
+                    pending.setdefault(tier, []).append(b)
+            if a.plan.loads_kv and a.lookup.entry is not None:
+                pending.setdefault(a.lookup.entry.tier, []).append(
+                    self._entry_fetch_bytes(a.lookup.entry, a.plan.matched_tokens)
+                )
+            self._start_chunk_stream(a, events)
+            n += 1
+            admitted = True
+        if admitted:
+            self._issue_prefetches()
+        return admitted
+
+    def _start_chunk_stream(self, a: "_Admission", events: List[ev.Event]) -> None:
+        """Turn one planned admission into a pending chunk stream: fetch
+        stored KV (prefix or fused sources), admit the slot's pool blocks
+        for the full context+prompt, land the reused rows, and queue the
+        remaining q tokens for chunked landing."""
+        req, t0 = a.req, self.clock.now
+        ctx, prompt = list(req.context_tokens), list(req.prompt_tokens)
+        n_ctx, n_total = len(ctx), len(ctx) + len(prompt)
+        ps = self._paged
+        block = self.ec.kv_block
+
+        fused_out = None
+        if a.plan.action == "fused":
+            fused_out = self._fetch_fused_sources(a, events)
+        elif a.plan.loads_kv and a.lookup.entry is not None:
+            self._fetch_kv_resilient(a, events)
+            self._release_prefetch(req.req_id)
+        else:
+            self._release_prefetch(req.req_id)
+
+        own = ps.admit(a.slot.index, n_total)
+        if fused_out is not None:
+            sources, fetched = fused_out
+            schedule = a.plan.fused
+            layout = fusion.fused_layout(
+                schedule, len(prompt),
+                align=self.ec.pack_align, bucket_min=self.ec.pack_bucket_min,
+            )
+            caches = fusion.build_fused_caches(
+                self.cfg, schedule, sources, layout.kv_len
+            )
+            # land the whole assembled buffer's valid rows: reuse spans
+            # carry stored (delta-RoPE'd) KV, recompute/prompt rows are
+            # zero and get overwritten as their chunk tokens land
+            rows = paged.block_rows(
+                ps.tables[a.slot.index, : len(own)], block
+            )[:n_total]
+            self._pool_update(
+                rows,
+                (
+                    (c.attn.k[:, 0, :n_total], c.attn.v[:, 0, :n_total])
+                    for c in caches
+                ),
+            )
+            arrays = fusion.fused_arrays(schedule, ctx, prompt, layout)
+            tokens = np.asarray(arrays["tokens"][0, : layout.n_q], np.int32)
+            positions = np.asarray(arrays["q_pos"][0, : layout.n_q], np.int32)
+            a.delay = max((d for _, _, d, _ in fetched), default=0.0)
+            a.matched = schedule.reused_tokens
+            for tier, nbytes, delay, rows_n in fetched:
+                events.append(ev.KVLoaded(
+                    t_s=t0, req_id=req.req_id, tier=tier, nbytes=nbytes,
+                    load_s=delay, matched_tokens=rows_n,
+                ))
+            events.append(ev.FusedAdmitted(
+                t_s=t0, req_id=req.req_id, slot=a.slot.index,
+                reused_tokens=schedule.reused_tokens,
+                recompute_tokens=schedule.recompute_tokens,
+                n_spans=len(schedule.spans), n_sources=len(sources),
+                q_len=layout.n_q, kv_len=n_total, jit_hit=True,
+            ))
+            self.fused_admissions += 1
+            self.fused_reused_tokens += schedule.reused_tokens
+            self.fused_recompute_tokens += schedule.recompute_tokens
+            self.fused_sources += len(sources)
+        elif a.artifact is not None:
+            matched = a.matched
+            rows = paged.block_rows(
+                ps.tables[a.slot.index, : -(-matched // block)], block
+            )[:matched]
+            self._pool_update(
+                rows,
+                (
+                    (
+                        jnp.asarray(c.attn.k[:, 0, :matched]),
+                        jnp.asarray(c.attn.v[:, 0, :matched]),
+                    )
+                    for c in a.artifact.caches
+                ),
+            )
+            events.append(ev.KVLoaded(
+                t_s=t0, req_id=req.req_id, tier=a.lookup.entry.tier,
+                nbytes=a.nbytes, load_s=a.delay, matched_tokens=matched,
+            ))
+            tokens = np.asarray(ctx[matched:] + prompt, np.int32)
+            positions = np.arange(matched, n_total, dtype=np.int32)
+        else:
+            # plain recompute, or a degraded fetch falling back to exact
+            # recompute (the burned time rides on a.delay -> ready_s)
+            tokens = np.asarray(ctx + prompt, np.int32)
+            positions = np.arange(0, n_total, dtype=np.int32)
+
+        store_after = (
+            a.plan.store_after and a.artifact is None and fused_out is None
+        )
+        if store_after:
+            key = tuple(ctx)
+            if key in self._wb_inflight:
+                # a still-pending batch-mate already owes this context's
+                # write-back (the packed batch's dedup, carried over)
+                store_after = False
+            else:
+                self._wb_inflight[key] = a.slot.index
+        self._chunks[a.slot.index] = _ChunkStream(
+            a=a, tokens=tokens, positions=positions, n_ctx=n_ctx,
+            ready_s=t0 + a.delay, store_after=store_after,
+        )
+
+    def _unified_launch(self, events: List[ev.Event]) -> bool:
+        """Run one launch if there is anything to run: a mixed chunked
+        launch when any chunk stream is ready, else a plain paged decode
+        step (identical numerics, pricing and billing to legacy — the
+        delegation anchor)."""
+        now = self.clock.now
+        ready = [
+            self._chunks[i] for i in sorted(self._chunks)
+            if self._chunks[i].ready_s <= now
+        ]
+        if not ready:
+            if any(s.active for s in self.slots):
+                self._decode_step(events)
+                return True
+            return False
+        self._unified_mixed_step(ready, events)
+        return True
+
+    def _unified_mixed_step(
+        self, ready: List[_ChunkStream], events: List[ev.Event]
+    ) -> None:
+        """ONE launch over the block pool mixing decode rows (every active
+        slot, one token each — always granted) with prefill chunks of the
+        ready streams (up to kv_block tokens each, under the step token
+        budget).  Priced additively (PerfModel.t_step_unified: parameters
+        stream once for the whole launch) and billed per row by normalized
+        standalone-cost shares, so the step's dollars are conserved
+        exactly."""
+        ps = self._paged
+        B, C = self.ec.max_slots, self.ec.kv_block
+        t0 = self.clock.now
+        decoding = [s for s in self.slots if s.active]
+        splits = []
+        for s in decoding:
+            cow = ps.prepare_append(s.index)
+            if cow is not None:
+                splits.append(cow)
+        if splits:
+            self._copy_pool_blocks(splits)
+
+        toks = np.zeros((B, C), np.int32)
+        q_pos = np.full((B, C), -(2 ** 30), np.int32)
+        last_idx = np.zeros((B,), np.int32)
+        decode_lens = []
+        for s in decoding:
+            toks[s.index, 0] = s.last_token
+            q_pos[s.index, 0] = int(ps.lens[s.index])
+            decode_lens.append(
+                s.record.context_len + s.record.prompt_len + s.generated
+            )
+        budget = max(self.ec.step_token_budget - len(decoding), 0)
+        grants: List[tuple] = []  # (stream, n granted this step)
+        chunk_desc: List[tuple] = []  # (n_new, L_end) for pricing
+        for c in ready:
+            g = min(C, c.remaining, budget)
+            if g <= 0:
+                if grants or decoding:
+                    continue  # budget spent; this stream waits a step
+                g = min(C, c.remaining)  # guarantee progress
+            budget -= g
+            sl = c.a.slot.index
+            toks[sl, :g] = c.tokens[c.done : c.done + g]
+            q_pos[sl, :g] = c.positions[c.done : c.done + g]
+            last_idx[sl] = g - 1
+            grants.append((c, g))
+            chunk_desc.append((g, int(c.positions[c.done + g - 1]) + 1))
+
+        jit_hit = self.unified_jit.record((B, C, ps.nb_max))
+        logits, self._pool_caches = self._jit_chunked(
+            self.params, jnp.asarray(toks), self._pool_caches,
+            jnp.asarray(ps.tables), jnp.asarray(q_pos), jnp.asarray(last_idx),
+        )
+        for s in decoding:
+            ps.note_token(s.index)
+
+        step_s = self.perf.t_step_unified(self.cost_cfg, decode_lens, chunk_desc)
+        dec_sh, chk_sh = self.perf.step_unified_shares(
+            self.cost_cfg, decode_lens, chunk_desc
+        )
+        self.clock.advance(step_s)
+        n_chunk_tokens = sum(g for _, g in grants)
+        self.unified_steps += 1
+        self.unified_chunk_tokens += n_chunk_tokens
+        self.unified_busy_s += step_s
+        self.decode_tokens += len(decoding)
+        dec_busy = step_s * sum(dec_sh)
+        self.decode_busy_s += dec_busy
+        self.admission_busy_s += step_s - dec_busy
+        events.append(ev.UnifiedStep(
+            t_s=t0, req_id=-1,
+            req_ids=tuple(
+                [s.request.req_id for s in decoding]
+                + [c.a.req.req_id for c, _ in grants]
+            ),
+            n_decode=len(decoding), chunk_tokens=n_chunk_tokens,
+            step_s=step_s, jit_hit=jit_hit,
+        ))
+
+        nxt_tok = np.asarray(jnp.argmax(logits, axis=-1))
+        for s, share in zip(decoding, dec_sh):
+            tok = int(nxt_tok[s.index])
+            s.record.tokens.append(tok)
+            s.record.decode_s += step_s
+            s.record.compute_cost += self._c_gpu_s * step_s * share
+            s.last_token = tok
+            tok_ev = ev.TokenEmitted(
+                t_s=self.clock.now, req_id=s.request.req_id,
+                token=tok, index=s.generated,
+            )
+            events.append(tok_ev)
+            if self.on_token is not None:
+                self.on_token(tok_ev)
+            s.generated += 1
+            self._maybe_finish(s, events)
+        for (c, g), share in zip(grants, chk_sh):
+            a = c.a
+            a.rec.compute_cost += self._c_gpu_s * step_s * share
+            c.done += g
+            if c.remaining > 0:
+                continue
+            del self._chunks[a.slot.index]
+            if self._wb_inflight.get(tuple(a.req.context_tokens)) == a.slot.index:
+                self._wb_inflight.pop(tuple(a.req.context_tokens))
+            if c.store_after:
+                art = self._pool_slot_artifact(a.slot.index, c.n_ctx)
+                self._write_back(a.req, art, events)
+            a.rec.matched_tokens = a.matched
+            a.rec.load_s = a.delay
+            # ttft_s = queue_s + load_s + prefill_s must equal the first
+            # token's timeline instant: prefill_s absorbs the chunked
+            # landing time INCLUDING the steps spent waiting on budget
+            a.rec.prefill_s = max(0.0, self.clock.now - a.rec.start_s - a.delay)
+            events.append(ev.PrefillDone(
+                t_s=self.clock.now, req_id=a.req.req_id,
+                n_tokens=len(c.tokens), prefill_s=a.rec.prefill_s,
+            ))
+            self._finish_admission(a, int(nxt_tok[a.slot.index]), events)
+
+    def _pool_slot_artifact(self, slot: int, n_tokens: int) -> Any:
+        """Gather a slot's first ``n_tokens`` pool rows as a standard
+        batch-1 host artifact — the pool-side analogue of
+        ``paged.extract_slot``, feeding the unified path's write-backs."""
+        ps = self._paged
+        block = self.ec.kv_block
+        rows = paged.block_rows(
+            ps.tables[slot, : -(-n_tokens // block)], block
+        )[:n_tokens]
+        return paged.LMState(
+            pos=np.full((1,), n_tokens, np.int32),
+            caches=tuple(
+                paged.BlockCache(
+                    paged.KVCache(
+                        np.asarray(pc.attn.k[:, rows])[:, None],
+                        np.asarray(pc.attn.v[:, rows])[:, None],
+                    ),
+                    None,
+                )
+                for pc in self._pool_caches
+            ),
+        )
+
+    def unified_stats(self) -> Dict[str, Any]:
+        """Unified-step counters: mixed launches run, prefill tokens landed
+        through chunks, modeled mixed-launch busy time, and the launch's jit
+        bucket hit/miss split (one static shape — steady unified serving
+        must show exactly one miss)."""
+        return {
+            "enabled": self._unified_on,
+            "steps": self.unified_steps,
+            "chunk_tokens": self.unified_chunk_tokens,
+            "busy_s": self.unified_busy_s,
+            "jit": self.unified_jit.as_dict(),
+        }
+
+    # ------------------------------------------------------------------ #
     # Batched decode
     # ------------------------------------------------------------------ #
     def _decode_step(self, events: List[ev.Event]) -> None:
@@ -1464,16 +1935,28 @@ class ServingEngine:
         self.decode_busy_s += step_s
         self.decode_tokens += n_active
         self.clock.advance(step_s)
-        per_req_cost = self._c_gpu_s * step_s / n_active
+        if self._paged_on:
+            # bill each slot proportional to the KV bytes its own live
+            # blocks stream through the step, not an equal split — a
+            # short-context slot no longer subsidizes a long batch-mate.
+            # Uniform lengths give equal weights, so this agrees with the
+            # dense split exactly in the uniform case.  The weights are
+            # normalized, so the split conserves the step's dollars.
+            w = [self.perf.decode_kv_bytes(self.cost_cfg, l) for l in lens]
+            total_w = sum(w)
+            costs = [self._c_gpu_s * step_s * wi / total_w for wi in w]
+        else:
+            costs = [self._c_gpu_s * step_s / n_active] * n_active
 
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        cost_it = iter(costs)
         for s in self.slots:
             if not s.active:
                 continue
             tok = int(nxt[s.index])
             s.record.tokens.append(tok)
             s.record.decode_s += step_s
-            s.record.compute_cost += per_req_cost
+            s.record.compute_cost += next(cost_it)
             s.last_token = tok
             tok_ev = ev.TokenEmitted(
                 t_s=self.clock.now, req_id=s.request.req_id,

@@ -61,6 +61,22 @@ class BatchAdmitted(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class UnifiedStep(Event):
+    """One unified continuous-batching launch (req_id is -1): decode rows
+    co-scheduled with prefill-chunk rows in a single kernel over the shared
+    block pool.  ``chunk_tokens`` is the prefill quota actually granted this
+    step; ``jit_hit`` whether the (static) launch shape reused an
+    already-compiled kernel — steady-state unified serving must never
+    recompile."""
+
+    req_ids: tuple  # decode participants first, then chunk participants
+    n_decode: int  # decode rows in the launch
+    chunk_tokens: int  # prefill-chunk tokens granted this step
+    step_s: float  # modeled duration (PerfModel.t_step_unified)
+    jit_hit: bool
+
+
+@dataclasses.dataclass(frozen=True)
 class KVLoaded(Event):
     tier: str
     nbytes: float

@@ -1,0 +1,262 @@
+"""Chunked prefill: bit-exact parity with the dense suffix-prefill path.
+
+The unified continuous-batching kernel pyramid, mirroring
+tests/test_paged_decode.py:
+
+  * kernel  — ``ref.chunked_prefill_ref`` vs the dense attention oracle on
+    MIXED rows (prefill chunks, decode rows, idle padding), the C=1 decode
+    degenerate case vs ``paged_decode_ref``, and the Pallas kernel
+    (interpret mode) vs the jnp oracle;
+  * model   — ``lm.prefill_chunked`` landing a prompt chunk-by-chunk while a
+    second slot decodes in the SAME launches vs per-slot dense
+    suffix-prefill/decode over real reduced archs (logits AND pool-resident
+    KV rows, exact);
+  * engine  — tests/test_unified.py (full-serve token parity, burst p99).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.kernels import ops, ref
+from repro.kvcache import paged
+from repro.models import registry
+
+
+# --------------------------------------------------------------------------- #
+# Kernel level
+# --------------------------------------------------------------------------- #
+def _mixed_case(rows, KV, hd, block, max_len, C, seed=0):
+    """Random pool + tables for a mixed batch.
+
+    ``rows`` is a list of (n_landed, n_chunk): a decode row is
+    (L, 1)-with-chunk-positions [L-1], a prefill row (n_ctx, c) carries chunk
+    positions [n_ctx, n_ctx+c), an idle row is (0, 0).  The chunk tokens' KV
+    is already *in* the pool (the kernel contract is attention-only; the
+    scatter happens at the model level), so n_landed counts them.
+    """
+    rng = np.random.default_rng(seed)
+    B = len(rows)
+    nb = max_len // block
+    n_blocks = 1 + B * nb
+    pool_k = rng.standard_normal((n_blocks * block, KV, hd)).astype(np.float32)
+    pool_v = rng.standard_normal((n_blocks * block, KV, hd)).astype(np.float32)
+    tables = np.zeros((B, nb), np.int32)
+    dense_k = np.zeros((B, max_len, KV, hd), np.float32)
+    dense_v = np.zeros((B, max_len, KV, hd), np.float32)
+    q_pos = np.full((B, C), -(2**30), np.int32)
+    nxt = 1
+    for b, (n_landed, n_chunk) in enumerate(rows):
+        total = n_landed
+        for j in range(-(-total // block)) if total else []:
+            tables[b, j] = nxt
+            sl = slice(nxt * block, (nxt + 1) * block)
+            dense_k[b, j * block : (j + 1) * block] = pool_k[sl]
+            dense_v[b, j * block : (j + 1) * block] = pool_v[sl]
+            nxt += 1
+        if n_chunk:
+            q_pos[b, :n_chunk] = np.arange(total - n_chunk, total)
+    q = rng.standard_normal((B, C, 2 * KV, hd)).astype(np.float32)
+    # dense mirror covers all max_len == nb*block rows; masked rows differ in
+    # content but contribute exactly 0, so outputs are bitwise equal
+    kv_pos = np.broadcast_to(np.arange(max_len, dtype=np.int32)[None], (B, max_len))
+    return dict(
+        q=q, pool_k=pool_k, pool_v=pool_v, tables=tables, q_pos=q_pos,
+        dense_k=dense_k, dense_v=dense_v, kv_pos=kv_pos,
+    )
+
+
+MIXED_ROWS = [(97, 32), (128, 1), (0, 0), (40, 8)]  # prefill, decode, idle, tail
+
+
+@pytest.mark.parametrize(
+    "KV,window", [(4, None), (2, None), (2, 96)]  # MHA, GQA, GQA+window
+)
+def test_chunked_ref_matches_dense_ref_exactly(KV, window):
+    """Gathering pool rows through the table and attending a MIXED batch of
+    chunk/decode/idle rows is BITWISE the dense attention over equivalent
+    slotted caches — block-boundary chunks, dump-block padding, -2^30 query
+    padding included."""
+    c = _mixed_case(MIXED_ROWS, KV=KV, hd=16, block=32, max_len=128, C=32)
+    got = ref.chunked_prefill_ref(
+        jnp.asarray(c["q"]), jnp.asarray(c["pool_k"]), jnp.asarray(c["pool_v"]),
+        block_table=jnp.asarray(c["tables"]), q_pos=jnp.asarray(c["q_pos"]),
+        block=32, window=window,
+    )
+    want = ref.attention_ref(
+        jnp.asarray(c["q"]), jnp.asarray(c["dense_k"]), jnp.asarray(c["dense_v"]),
+        q_pos=jnp.asarray(c["q_pos"]), kv_pos=jnp.asarray(c["kv_pos"]),
+        causal=True, window=window,
+    )
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # idle row emits exactly zeros
+    assert np.all(np.asarray(got)[2] == 0.0)
+
+
+def test_chunked_ref_c1_is_paged_decode():
+    """The C=1 degenerate case IS paged decode: same gather, same mask."""
+    c = _mixed_case([(5, 1), (97, 1), (128, 1)], KV=2, hd=16, block=32,
+                    max_len=128, C=1, seed=3)
+    got = ref.chunked_prefill_ref(
+        jnp.asarray(c["q"]), jnp.asarray(c["pool_k"]), jnp.asarray(c["pool_v"]),
+        block_table=jnp.asarray(c["tables"]), q_pos=jnp.asarray(c["q_pos"]),
+        block=32,
+    )
+    want = ref.paged_decode_ref(
+        jnp.asarray(c["q"]), jnp.asarray(c["pool_k"]), jnp.asarray(c["pool_v"]),
+        block_table=jnp.asarray(c["tables"]), q_pos=jnp.asarray(c["q_pos"]),
+        block=32,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+@pytest.mark.parametrize("KV,window", [(4, None), (2, None), (2, 200)])
+def test_chunked_pallas_interpret_matches_ref(KV, window):
+    """The Pallas kernel (interpret mode) agrees with the jnp oracle —
+    exercises the scalar-prefetch table indirection, the [C, G] flash
+    recurrence, chunk padding and dump-block masking."""
+    from repro.kernels import chunked_prefill as cpk
+
+    c = _mixed_case(
+        [(130, 64), (257, 1), (0, 0), (384, 128)], KV=KV, hd=16, block=128,
+        max_len=384, C=128, seed=5,
+    )
+    want = ref.chunked_prefill_ref(
+        jnp.asarray(c["q"]), jnp.asarray(c["pool_k"]), jnp.asarray(c["pool_v"]),
+        block_table=jnp.asarray(c["tables"]), q_pos=jnp.asarray(c["q_pos"]),
+        block=128, window=window,
+    )
+    got = cpk.chunked_prefill_attention(
+        jnp.asarray(c["q"]), jnp.asarray(c["pool_k"]), jnp.asarray(c["pool_v"]),
+        block_table=jnp.asarray(c["tables"]), q_pos=jnp.asarray(c["q_pos"]),
+        block=128, window=window, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6, rtol=2e-6)
+
+
+def test_ops_chunked_prefill_dispatches_on_cpu():
+    c = _mixed_case([(9, 4), (40, 1)], KV=2, hd=8, block=16, max_len=48, C=8,
+                    seed=7)
+    out = ops.chunked_prefill(
+        jnp.asarray(c["q"]), jnp.asarray(c["pool_k"]), jnp.asarray(c["pool_v"]),
+        block_table=jnp.asarray(c["tables"]), q_pos=jnp.asarray(c["q_pos"]),
+        block=16,
+    )
+    assert out.shape == c["q"].shape and np.isfinite(np.asarray(out)).all()
+
+
+# --------------------------------------------------------------------------- #
+# Model level
+# --------------------------------------------------------------------------- #
+def _setup(arch, seed=0):
+    cfg = reduced_config(get_config(arch))
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, api, params
+
+
+ATOL = 5e-6  # cross-launch-shape fp32 tolerance: a 1-row legacy decode
+# matmul (gemv) and a C-row mixed launch (gemm) reduce in different orders,
+# so logits agree to ~1e-6 — tokens (argmax) must still be IDENTICAL, which
+# is the engine-level acceptance contract.  Same-shape comparisons (the
+# kernel level above) stay bitwise.
+
+
+@pytest.mark.parametrize("arch", ["llama-7b", "qwen2-1.5b", "olmoe-1b-7b"])
+def test_model_prefill_chunked_token_exact(arch):
+    """lm.prefill_chunked == dense suffix prefill while a decode row rides
+    in the SAME launches: slot 0 lands its prompt chunk-by-chunk (crossing a
+    block boundary mid-chunk stream), slot 1 decodes one token per launch —
+    final prefill logits, every decode logit, and the pool-resident KV rows
+    match the per-slot dense paths to ATOL, and every argmax token is
+    identical."""
+    cfg, api, params = _setup(arch)
+    rng = np.random.default_rng(2)
+    max_len, block, C = 64, 16, 16
+    ctx0, prompt0 = 13, 24  # chunks land 13->37 across block boundaries
+    ctx1 = 37
+    B = 2
+
+    # dense references: slot 0 suffix-prefills prompt0 after ctx0; slot 1
+    # decodes from ctx1
+    toks0 = list(map(int, rng.integers(0, cfg.vocab, ctx0 + prompt0)))
+    toks1 = list(map(int, rng.integers(0, cfg.vocab, ctx1)))
+    st0_ctx = api.init_state(cfg, 1, max_len)
+    _, st0_ctx = api.prefill(
+        params, cfg, jnp.asarray([toks0[:ctx0]], jnp.int32), st0_ctx
+    )
+    want_logits0, st0 = api.prefill(
+        params, cfg, jnp.asarray([toks0[ctx0:]], jnp.int32), st0_ctx
+    )
+    st1 = api.init_state(cfg, 1, max_len)
+    _, st1 = api.prefill(params, cfg, jnp.asarray([toks1], jnp.int32), st1)
+
+    # paged mirror: blocks for the FULL totals upfront (the unified engine's
+    # intake), but only the already-computed context rows landed
+    ps = paged.PagedSlots(B, max_len, block)
+    caches = paged.init_pool_caches(cfg, ps.pool.n_blocks, block, dtype=jnp.float32)
+    ps.admit(0, ctx0 + prompt0)
+    ps.admit(1, ctx1)
+    new = []
+    for ki, c in enumerate(caches):
+        k, v = c.attn.k, c.attn.v
+        for b, (st, L) in enumerate(((st0_ctx, ctx0), (st1, ctx1))):
+            nb = -(-L // block)
+            dst = paged.block_rows(ps.tables[b, :nb], block)[:L]
+            k = k.at[:, dst].set(st.caches[ki].attn.k[:, 0, :L].astype(k.dtype))
+            v = v.at[:, dst].set(st.caches[ki].attn.v[:, 0, :L].astype(v.dtype))
+        new.append(paged.BlockCache(paged.KVCache(k, v), None))
+    caches = tuple(new)
+
+    # interleaved chunk stream: slot 0 lands C-grained chunks, slot 1 decodes
+    dtoks = jnp.asarray([[5]], jnp.int32)
+    landed = ctx0
+    dec_len = ctx1
+    got_logits0 = None
+    step = 0
+    while landed < ctx0 + prompt0:
+        n_new = min(C, ctx0 + prompt0 - landed)
+        tok_row0 = toks0[landed : landed + n_new] + [0] * (C - n_new)
+        pos_row0 = list(range(landed, landed + n_new)) + [-(2**30)] * (C - n_new)
+        tok_row1 = [int(dtoks[0, 0])] + [0] * (C - 1)
+        pos_row1 = [dec_len] + [-(2**30)] * (C - 1)
+        tokens = jnp.asarray([tok_row0, tok_row1], jnp.int32)
+        q_pos = jnp.asarray([pos_row0, pos_row1], jnp.int32)
+        last_idx = jnp.asarray([n_new - 1, 0], jnp.int32)
+        logits, caches = api.prefill_chunked(
+            params, cfg, tokens, caches,
+            block_table=jnp.asarray(ps.tables), q_pos=q_pos, last_idx=last_idx,
+            block=block,
+        )
+        landed += n_new
+        if landed == ctx0 + prompt0:
+            got_logits0 = logits[0]
+        # dense decode reference for slot 1, lockstep
+        want_dec, st1 = api.decode(params, cfg, dtoks, st1)
+        np.testing.assert_allclose(
+            np.asarray(logits[1]), np.asarray(want_dec[0]), atol=ATOL, rtol=ATOL,
+            err_msg=f"{arch} step {step}",
+        )
+        assert int(jnp.argmax(logits[1])) == int(jnp.argmax(want_dec[0])), (
+            arch, step)
+        dec_len += 1
+        dtoks = jnp.argmax(want_dec, axis=-1)[:, None].astype(jnp.int32)
+        step += 1
+
+    np.testing.assert_allclose(
+        np.asarray(got_logits0), np.asarray(want_logits0[0]), atol=ATOL, rtol=ATOL,
+        err_msg=arch,
+    )
+    assert int(jnp.argmax(got_logits0)) == int(jnp.argmax(want_logits0[0])), arch
+
+    # pool rows == dense cache rows for every live token of both slots
+    for b, (st, L) in enumerate(((st0, ctx0 + prompt0), (st1, dec_len))):
+        nb = -(-L // block)
+        rows = paged.block_rows(ps.tables[b, :nb], block)[:L]
+        for ki in range(len(caches)):
+            got_k = np.asarray(caches[ki].attn.k[:, rows])
+            want_k = np.asarray(st.caches[ki].attn.k[:, 0, :L])
+            np.testing.assert_allclose(
+                got_k, want_k, atol=ATOL, rtol=ATOL, err_msg=f"{arch} {b} {ki}"
+            )

@@ -1,0 +1,402 @@
+"""Unified continuous-batching step: parity, latency flatness, billing.
+
+The unified step (EngineConfig.unified_step=True) replaces the legacy
+admit-OR-decode loop with ONE launch per step mixing decode rows and
+prefill-chunk rows over the shared block pool.  Four properties anchor it:
+
+  * parity   — a full serve under unified generates token-for-token what the
+    legacy paged path generates, across packable archs and reuse mixes
+    (chunked landings change launch shapes, so logits agree to reduction
+    order; argmax tokens are identical);
+  * latency  — a long-context burst landing mid-decode no longer stalls
+    in-flight decodes: the worst decode token gap stays within 1.2x the
+    steady-state gap, while the legacy path spikes by the full prefill;
+  * economy  — mixed launches are priced once (parameters stream once) and
+    billed per row by normalized standalone-cost shares, so the cost ledger
+    conserves dollars exactly; paged decode bills each slot proportional to
+    its own live-block KV bytes instead of an equal split;
+  * schedule — a diurnal idle gap runs every missed migration pass AT its
+    own due time (satellite of the same PR), not as one late pass.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.kvcache.hierarchy import TierSpec
+from repro.models import registry
+from repro.obs import Telemetry
+from repro.serving import (
+    AlwaysReusePlanner,
+    BlendPlanner,
+    EngineConfig,
+    Request,
+    ServingEngine,
+)
+from repro.serving import events as ev
+
+
+def _setup(arch, seed=0):
+    cfg = reduced_config(get_config(arch))
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def _burst(cfg, *, n, ctx_lens, prompt_len=8, new=4, seed=0, arrival=0.0):
+    rng = np.random.default_rng(seed)
+    ctxs = [list(map(int, rng.integers(0, cfg.vocab, L))) for L in ctx_lens]
+    return [
+        dict(
+            req_id=i,
+            context_tokens=ctxs[i % len(ctxs)],
+            prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, prompt_len))),
+            max_new_tokens=new,
+            arrival_s=arrival,
+        )
+        for i in range(n)
+    ]
+
+
+def _run(cfg, params, reqs, planner=None, **ec_kw):
+    kw = dict(max_slots=4, max_len=128, chunk_tokens=16, paged_decode=True)
+    kw.update(ec_kw)
+    eng = ServingEngine(
+        cfg, params, engine_cfg=EngineConfig(**kw),
+        planner=planner or AlwaysReusePlanner(),
+    )
+    for r in reqs:
+        eng.submit(Request(**r))
+    events = []
+    while not eng.idle:
+        events.extend(eng.step())
+    return eng, events
+
+
+# --------------------------------------------------------------------------- #
+# Token parity with the legacy paged path
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", ["llama-7b", "qwen2-1.5b", "olmoe-1b-7b"])
+def test_unified_token_parity_across_archs(arch):
+    """A full serve under the unified step emits token-for-token what the
+    legacy paged path emits, over a recompute + write-back + reuse mix, and
+    the block pool drains clean."""
+    cfg, params = _setup(arch)
+    reqs = _burst(cfg, n=8, ctx_lens=[64, 64], seed=1)
+    eng_l, _ = _run(cfg, params, reqs)
+    eng_u, events = _run(cfg, params, reqs, unified_step=True)
+
+    assert {r.req_id: r.tokens for r in eng_l.records} == {
+        r.req_id: r.tokens for r in eng_u.records
+    }
+    assert {r.req_id: r.action for r in eng_l.records} == {
+        r.req_id: r.action for r in eng_u.records
+    }
+    stats = eng_u.unified_stats()
+    assert stats["enabled"] and stats["steps"] > 0
+    assert stats["chunk_tokens"] > 0 and stats["busy_s"] > 0
+    # prefill landed through chunks covers every non-reused token exactly
+    landed = sum(
+        len(r.context_tokens) + len(r.prompt_tokens) - rec.matched_tokens
+        for r, rec in (
+            (Request(**d), rec)
+            for d, rec in zip(reqs, sorted(eng_u.records, key=lambda r: r.req_id))
+        )
+    )
+    assert stats["chunk_tokens"] == landed
+    # chunked landings surface as UnifiedStep events, time-ordered
+    usteps = [e for e in events if isinstance(e, ev.UnifiedStep)]
+    assert len(usteps) == stats["steps"]
+    assert sum(e.chunk_tokens for e in usteps) == stats["chunk_tokens"]
+    times = [e.t_s for e in events]
+    assert times == sorted(times)
+    # TTFT identity survives the chunked landing
+    for rec in eng_u.records:
+        assert rec.ttft_s == pytest.approx(
+            rec.queue_s + rec.load_s + rec.prefill_s
+        )
+    eng_u._paged.audit()
+    assert eng_u._paged.pool.n_used == 0
+
+
+def test_unified_one_compile_steady_state():
+    """The mixed launch has ONE static shape (B, C, nb_max): an entire serve
+    — bursts, reuse, drain — compiles it exactly once."""
+    cfg, params = _setup("llama-7b")
+    reqs = _burst(cfg, n=8, ctx_lens=[64, 96], seed=2)
+    eng, _ = _run(cfg, params, reqs, unified_step=True)
+    jit = eng.unified_stats()["jit"]
+    assert jit["misses"] == 1
+    assert jit["hits"] == eng.unified_stats()["steps"] - 1
+
+
+# --------------------------------------------------------------------------- #
+# Burst-admission decode latency
+# --------------------------------------------------------------------------- #
+def _decode_gaps(events, req_id):
+    ts = [
+        e.t_s for e in events
+        if isinstance(e, ev.TokenEmitted) and e.req_id == req_id
+    ]
+    return np.diff(ts)
+
+
+def test_unified_flat_decode_gap_under_burst():
+    """A long-context burst arriving mid-decode: under the unified step the
+    in-flight request's worst token gap stays within 1.2x its median
+    (chunks ride along in the same launches), while the legacy path stalls
+    decode for the burst's full packed prefill."""
+    cfg, params = _setup("llama-7b")
+    victim = _burst(cfg, n=1, ctx_lens=[64], new=24, seed=3)
+    burst = [
+        dict(r, req_id=10 + i, arrival_s=0.02)
+        for i, r in enumerate(
+            _burst(cfg, n=2, ctx_lens=[352, 352], new=2, seed=4)
+        )
+    ]
+    kw = dict(max_len=512, cost_arch="llama-7b")
+    eng_l, ev_l = _run(cfg, params, victim + burst, **kw)
+    eng_u, ev_u = _run(cfg, params, victim + burst, unified_step=True, **kw)
+
+    g_l, g_u = _decode_gaps(ev_l, 0), _decode_gaps(ev_u, 0)
+    assert len(g_l) == len(g_u) == 23
+    # legacy: the packed prefill of ~720 burst tokens lands between two of
+    # the victim's tokens — a multi-x spike over the steady decode gap
+    assert g_l.max() > 1.5 * np.median(g_l)
+    # unified: chunks are co-scheduled, the worst gap is a mixed launch
+    # (parameters stream once — marginal cost of a full chunk is small)
+    assert g_u.max() <= 1.2 * np.median(g_u)
+    # and admission still makes progress: the burst finishes, pool drains
+    assert len(eng_u.records) == 3
+    eng_u._paged.audit()
+    assert eng_u._paged.pool.n_used == 0
+
+
+def test_unified_burst_token_parity():
+    """Same burst serve: unified tokens match legacy token-for-token even
+    though the launch shapes (and step timing) are completely different."""
+    cfg, params = _setup("llama-7b")
+    victim = _burst(cfg, n=1, ctx_lens=[64], new=24, seed=3)
+    burst = [
+        dict(r, req_id=10 + i, arrival_s=0.02)
+        for i, r in enumerate(
+            _burst(cfg, n=2, ctx_lens=[352, 352], new=2, seed=4)
+        )
+    ]
+    kw = dict(max_len=512)
+    eng_l, _ = _run(cfg, params, victim + burst, **kw)
+    eng_u, _ = _run(cfg, params, victim + burst, unified_step=True, **kw)
+    assert {r.req_id: r.tokens for r in eng_l.records} == {
+        r.req_id: r.tokens for r in eng_u.records
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Fused (CacheBlend) admissions folded into the unified launch
+# --------------------------------------------------------------------------- #
+def test_unified_fused_r1_matches_recompute():
+    """Shuffled-chunk requests served FUSED at recompute_frac=1.0 inside the
+    unified step generate token-for-token what full recompute generates —
+    the fused q stream lands through the same chunked launches."""
+    CHUNK = 16
+    cfg, params = _setup("llama-7b")
+    rng = np.random.default_rng(5)
+    pool = [list(map(int, rng.integers(0, cfg.vocab, CHUNK))) for _ in range(4)]
+    reqs = [dict(
+        req_id=0, context_tokens=sum(pool, []),
+        prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, 8))),
+        max_new_tokens=3, arrival_s=0.0,
+    )]
+    for i, p in enumerate([[2, 0, 3, 1], [3, 2, 1, 0], [1, 3, 0, 2]]):
+        reqs.append(dict(
+            req_id=i + 1, context_tokens=sum((pool[j] for j in p), []),
+            prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, 8))),
+            max_new_tokens=3, arrival_s=30.0,
+        ))
+    kw = dict(max_slots=2)
+    eng_f, events = _run(
+        cfg, params, reqs, BlendPlanner(recompute_frac=1.0, always=True),
+        fusion_enabled=True, unified_step=True, **kw
+    )
+    eng_n, _ = _run(cfg, params, reqs, reuse_enabled=False, **kw)
+    assert {r.req_id: r.tokens for r in eng_f.records} == {
+        r.req_id: r.tokens for r in eng_n.records
+    }
+    acts = {r.req_id: r.action for r in eng_f.records}
+    assert acts[0] == "recompute"
+    assert all(acts[i] == "fused" for i in (1, 2, 3))
+    fused_events = [e for e in events if isinstance(e, ev.FusedAdmitted)]
+    assert len(fused_events) == 3
+    assert all(e.reused_tokens == 0 and e.n_sources == 0 for e in fused_events)
+    eng_f._paged.audit()
+    assert eng_f._paged.pool.n_used == 0
+
+
+def test_unified_fused_partial_reuses_sources():
+    """r < 1 inside the unified step: sources are fetched and pinned, reuse
+    + recompute partition every context, and counters agree with events."""
+    CHUNK = 16
+    cfg, params = _setup("llama-7b")
+    rng = np.random.default_rng(6)
+    pool = [list(map(int, rng.integers(0, cfg.vocab, CHUNK))) for _ in range(4)]
+    reqs = [dict(
+        req_id=0, context_tokens=sum(pool, []),
+        prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, 8))),
+        max_new_tokens=3, arrival_s=0.0,
+    )]
+    for i, p in enumerate([[2, 0, 3, 1], [3, 2, 1, 0]]):
+        reqs.append(dict(
+            req_id=i + 1, context_tokens=sum((pool[j] for j in p), []),
+            prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, 8))),
+            max_new_tokens=3, arrival_s=30.0,
+        ))
+    eng, events = _run(
+        cfg, params, reqs, BlendPlanner(recompute_frac=0.25, always=True),
+        fusion_enabled=True, unified_step=True, max_slots=2,
+    )
+    fused_events = [e for e in events if isinstance(e, ev.FusedAdmitted)]
+    assert len(fused_events) == 2
+    for e in fused_events:
+        assert e.reused_tokens > 0 and e.n_sources >= 1
+        assert e.reused_tokens + e.recompute_tokens == 4 * CHUNK
+    stats = eng.fused_stats()
+    assert stats["admissions"] == 2
+    assert stats["reused_tokens"] == sum(e.reused_tokens for e in fused_events)
+    assert all(e.pins == 0 for e in eng.store.entries.values())
+    eng._paged.audit()
+    assert eng._paged.pool.n_used == 0
+
+
+# --------------------------------------------------------------------------- #
+# Cost attribution
+# --------------------------------------------------------------------------- #
+def test_paged_decode_bills_by_live_kv_bytes():
+    """Ragged batch-mates split each paged decode step proportional to
+    their own live-block KV bytes — reconstructed exactly from the engine's
+    own pricing, by differencing a serve with decode against a serve whose
+    requests stop at their first (prefill-emitted) token."""
+    cfg, params = _setup("llama-7b")
+    new = 5
+    reqs = _burst(cfg, n=2, ctx_lens=[32, 352], new=new, seed=7)
+    kw = dict(max_slots=2, max_len=512, cost_arch="llama-7b")
+    eng, _ = _run(cfg, params, reqs, **kw)
+    eng0, _ = _run(
+        cfg, params, [dict(r, max_new_tokens=1) for r in reqs], **kw
+    )
+    rec = {r.req_id: r for r in eng.records}
+    rec0 = {r.req_id: r for r in eng0.records}
+
+    # both admitted in one batch, decode together for new-1 shared steps
+    ctxs = [32, 352]
+    prompt = 8
+    want = {0: 0.0, 1: 0.0}
+    for g in range(new - 1):
+        lens = [c + prompt + 1 + g for c in ctxs]
+        step_s = eng.perf.t_decode_paged(eng.cost_cfg, lens)
+        w = [eng.perf.decode_kv_bytes(eng.cost_cfg, l) for l in lens]
+        for i in (0, 1):
+            want[i] += eng._c_gpu_s * step_s * w[i] / sum(w)
+    for i in (0, 1):
+        got = rec[i].compute_cost - rec0[i].compute_cost
+        assert got == pytest.approx(want[i], rel=1e-12), i
+    # the long-context mate pays strictly more of every shared step
+    assert want[1] > want[0]
+    # the split conserves each step's dollars: per-request deltas sum to
+    # the batch's total decode spend
+    total = sum(
+        eng.perf.t_decode_paged(
+            eng.cost_cfg, [c + prompt + 1 + g for c in ctxs]
+        )
+        for g in range(new - 1)
+    ) * eng._c_gpu_s
+    assert sum(want.values()) == pytest.approx(total, rel=1e-12)
+
+
+def test_unified_conservation_with_telemetry():
+    """Telemetry's cost-conservation law holds under the unified step: the
+    ledger's compute/storage/transfer totals match the summary at 1e-9 —
+    per-row share billing conserves every mixed launch's dollars."""
+    cfg, params = _setup("llama-7b")
+    tel = Telemetry()
+    reqs = _burst(cfg, n=6, ctx_lens=[64, 96], seed=8)
+    eng = ServingEngine(
+        cfg, params,
+        engine_cfg=EngineConfig(
+            max_slots=2, max_len=128, chunk_tokens=16,
+            paged_decode=True, unified_step=True,
+            tier_specs=[TierSpec("host_dram", 1.0), TierSpec("s3", 1.0)],
+            store_tier="s3",
+        ),
+        planner=AlwaysReusePlanner(),
+        telemetry=tel,
+    )
+    for r in reqs:
+        eng.submit(Request(**r))
+    s = eng.run()
+    residuals = tel.check(s)
+    assert max(residuals.values()) <= 1e-9
+    assert eng.unified_stats()["steps"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# Migration catch-up across idle gaps
+# --------------------------------------------------------------------------- #
+def test_idle_gap_runs_missed_migrations_on_schedule():
+    """A long idle gap (diurnal lull) between requests: every missed
+    migration pass runs AT its own due time while the clock walks the gap —
+    the cold entry demotes early in the gap, not in one late pass at the
+    next arrival's edge."""
+    cfg, params = _setup("llama-7b")
+    rng = np.random.default_rng(9)
+    ctx = list(map(int, rng.integers(0, cfg.vocab, 64)))
+    mk = lambda i, t: dict(
+        req_id=i, context_tokens=ctx,
+        prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, 8))),
+        max_new_tokens=2, arrival_s=t,
+    )
+    gap_end = 60.0
+    ec_kw = dict(
+        max_slots=1,
+        tier_specs=[
+            TierSpec("host_dram", 1.0),
+            TierSpec("local_nvme", 1.0),
+            TierSpec("s3", 1.0),
+        ],
+        store_tier="host_dram",
+        migration_interval_s=1.0,
+    )
+    eng, events = _run(cfg, params, [mk(0, 0.0), mk(1, gap_end)], **ec_kw)
+
+    migs = [e for e in events if isinstance(e, ev.TierMigrated)]
+    assert migs and all(m.reason == "demote" for m in migs)
+    # the demotion happened ON SCHEDULE, early in the gap — pre-fix, all
+    # missed passes collapsed into one at the far edge (t_s == gap_end)
+    assert migs[0].t_s < 10.0
+    # the event stream stays time-ordered through the walked gap
+    times = [e.t_s for e in events]
+    assert times == sorted(times)
+    # request 1 reuses the context from wherever the schedule demoted it to
+    loads = [e for e in events if isinstance(e, ev.KVLoaded)]
+    assert [e.tier for e in loads] == [migs[-1].to_tier]
+
+
+def test_idle_gap_migrations_under_unified_step():
+    """The same catch-up walk services the unified step's idle jumps (it
+    shares _advance_clock): demotions land inside the gap there too."""
+    cfg, params = _setup("llama-7b")
+    rng = np.random.default_rng(10)
+    ctx = list(map(int, rng.integers(0, cfg.vocab, 64)))
+    mk = lambda i, t: dict(
+        req_id=i, context_tokens=ctx,
+        prompt_tokens=list(map(int, rng.integers(0, cfg.vocab, 8))),
+        max_new_tokens=2, arrival_s=t,
+    )
+    eng, events = _run(
+        cfg, params, [mk(0, 0.0), mk(1, 60.0)],
+        unified_step=True, max_slots=1,
+        tier_specs=[TierSpec("host_dram", 1.0), TierSpec("s3", 1.0)],
+        store_tier="host_dram", migration_interval_s=1.0,
+    )
+    migs = [e for e in events if isinstance(e, ev.TierMigrated)]
+    assert migs and migs[0].t_s < 10.0
+    assert {r.req_id: len(r.tokens) for r in eng.records} == {0: 2, 1: 2}
