@@ -28,6 +28,13 @@ Reads the two files ``benchmarks/serve_bench.py`` writes and checks:
     token-identical to the fault-free run, the faulted pass cost no more
     than the configured inflation ceiling, and it too compiled nothing
     during the measured wave;
+  * marketplace economics — the cost-aware market mode spent strictly
+    fewer fleet dollars than BOTH baselines (never-buy and always-buy),
+    purchases actually happened, the adversarial seller's corrupt delivery
+    was caught (never served) and the seller blacklisted, tokens stayed
+    bit-identical to pure recompute across all three modes, the measured
+    wave compiled nothing, and the settlement ledger's double-entry
+    conservation residual is at most 1e-9;
   * flat decode p99 — the unified continuous-batching lane's victim decode
     p99 token gap stays within 1.2x its steady-state gap while a burst of
     long-context admissions lands (the legacy lane must spike above that),
@@ -161,6 +168,43 @@ def check_chaos(bench: dict, lanes: dict) -> None:
              "injected failures burned no accounted transfer bytes")
 
 
+def check_market(bench: dict, lanes: dict) -> None:
+    w = bench["workloads"].get("market")
+    _require(w is not None, "market lane missing from bench artifact")
+    m, nb, ab = w["market"], w["never_buy"], w["always_buy"]
+    _require(w["token_identity"] is True,
+             "marketplace modes generated different tokens than recompute")
+    _require(m["purchases"] > 0,
+             f"cost-aware market never bought anything: {m}")
+    _require(ab["purchases"] > m["purchases"],
+             f"always-buy bought no more than cost-aware "
+             f"({ab['purchases']} vs {m['purchases']}) — the comparison is "
+             f"vacuous")
+    _require(nb["purchases"] == 0,
+             f"never-buy baseline somehow traded: {nb}")
+    _require(m["total_cost"] < nb["total_cost"],
+             f"market fleet cost ${m['total_cost']:.6f} does not beat "
+             f"never-buy ${nb['total_cost']:.6f}")
+    _require(m["total_cost"] < ab["total_cost"],
+             f"market fleet cost ${m['total_cost']:.6f} does not beat "
+             f"always-buy ${ab['total_cost']:.6f}")
+    _require(m["corrupt_blocked"] >= 1,
+             f"the armed adversary's corrupt delivery was never caught: {m}")
+    _require(m["corrupt_served"] == 0,
+             f"a corrupt payload was SERVED: {m}")
+    _require(m["adversary_blacklisted"] is True,
+             f"the corrupt seller was not blacklisted: {m}")
+    _require(m["jit_misses"] == 0,
+             f"market measured wave kept recompiling: {m}")
+    _require(m["settlement_residual"] <= ATOL,
+             f"settlement double-entry residual {m['settlement_residual']!r} "
+             f"> {ATOL}")
+    stats = lanes["market"].get("market")
+    _require(stats is not None, "market lane carries no exchange stats")
+    _require(stats["corrupt_served"] == 0,
+             f"exchange stats report a served corrupt payload: {stats}")
+
+
 P99_GAP_CEILING = 1.2  # unified lane: worst decode gap vs steady, at most
 BASELINE_RTOL = 0.25   # committed-baseline drift allowance on speedups
 
@@ -247,6 +291,7 @@ def main() -> int:
         check_conservation(lanes)
         check_chaos(bench, lanes)
         check_unified(bench)
+        check_market(bench, lanes)
         base_note = (
             "baseline: diff disabled" if args.no_baseline
             else check_baseline(bench, _committed_baseline(args.bench))
@@ -259,6 +304,7 @@ def main() -> int:
     aff = bench["workloads"]["cluster"]["affinity"]
     h = bench["workloads"]["chaos"]
     uni = bench["workloads"]["unified"]["unified"]
+    mkt = bench["workloads"]["market"]["market"]
     print(
         f"check_snapshot: OK — burst {sp['burst']:.2f}x, "
         f"decode {sp['decode_tokens_per_s']:.2f}x, "
@@ -268,7 +314,10 @@ def main() -> int:
         f"0 steady recompiles, conservation <= {ATOL} on "
         f"{len(lanes)} telemetry lanes, chaos token-identical "
         f"({h['degraded_requests']} degraded, "
-        f"cost x{h['cost_inflation']:.2f} <= x{h['cost_ceiling']:.1f}); "
+        f"cost x{h['cost_inflation']:.2f} <= x{h['cost_ceiling']:.1f}), "
+        f"market beats never-buy {sp['market_vs_never_cost']:.2f}x and "
+        f"always-buy {sp['market_vs_always_cost']:.2f}x "
+        f"({mkt['purchases']} purchases, adversary blocked); "
         f"{base_note}"
     )
     return 0

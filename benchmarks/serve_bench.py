@@ -28,6 +28,11 @@ TTFT are economics-model numbers, not CPU wall clock.  Emits
     with a shared cold tier), per-mode (affinity vs round_robin router):
     aggregate hit rate, tokens per modeled busy second, gossip/jit
     counters, shared-tier dedup stats;
+  * the ``market`` workload (three tenant engines on one marketplace,
+    partially-overlapping working sets, the last tenant turned dishonest
+    after jit warm), per-mode (cost-aware market vs never-buy vs
+    always-buy): fleet dollars (engine costs + exchange fees), purchase /
+    blocked-delivery / blacklist counters, settlement residual;
   * ``speedup``: packed-over-single admission throughput, paged-over-dense
     decode tokens/s (token-identical), full-over-fused prefill time on the
     rag workload (the CacheBlend-style selective-recompute win), and
@@ -754,6 +759,206 @@ def _serve_chaos(cfg, params, *, n, replicas, cost_arch, seed):
     return out, lane, {r.req_id: r.tokens for r in rec1}
 
 
+# Marketplace lane knobs.  Two context lengths split the buy-vs-recompute
+# decision.  Prefill time at paper ``cost_arch`` scale has a parameter-read
+# floor (~$1.1e-4 whether 16 or 48 tokens), so a 32-token context's KV is
+# worth almost nothing over recomputing it, while a 256-token context's
+# prefill dollars (~$4.3e-4 over the floor) dwarf both the deep spot-check
+# (one floor-priced sample prefill) and the exchange fee.  Sellers price by
+# the production write-premium rule — ask = premium x saved_per_use /
+# expected_sales — and at 1.25x/1 sale the short ask lands just above its
+# recompute headroom (decline) and the long ask well below (buy): the
+# cost-aware planner trades exactly the profitable half, the always-buy
+# baseline pays fees + verification on worthless shorts too, and never-buy
+# recomputes everything.  Three tenants hold disjoint working sets and each
+# shops its successor's (t0 -> t1 -> t2 -> t0); t2 turns dishonest
+# (in-flight corruption via kvcache.faults) AFTER the jit warm wave.
+MARKET_CTX_LEN = 256
+MARKET_SHORT_LEN = 32
+MARKET_PROMPT = 16
+MARKET_NEW = 4
+MARKET_TENANTS = 3
+MARKET_LONGS = 3  # long contexts per tenant working set
+MARKET_SHORTS = 2  # short contexts per tenant working set
+MARKET_WRITE_PREMIUM = 1.25  # the production cache-write premium
+MARKET_EXPECTED_SALES = 1.0
+MARKET_VERIFY_RATE = 0.25
+# Flat per-purchase exchange fee (pure fleet deadweight, collected by the
+# settlement ledger on top of the 5% rate).  This is what separates the
+# cost-aware planner from always-buy: at the parameter-read floor a
+# 32-token context saves almost nothing over recompute, so every short
+# purchase always-buy makes burns ~the flat fee for free.  The window is
+# wide — f > ~2e-5 punishes always-buy's four short purchases, f < ~3.5e-4
+# keeps the six long purchases net-positive vs never-buy.
+MARKET_FLAT_FEE = 1e-4
+MARKET_ADV_SEED = 41  # adversary injector seed offset
+
+
+def _serve_market(cfg, params, *, cost_arch, seed, mode, telemetry=False):
+    """One marketplace configuration over three tenant engines sharing one
+    exchange: ``mode`` picks the planner economy — "market" (cost-aware
+    buy-vs-recompute), "never" (no marketplace: every cold context
+    recomputes), "always" (buy whenever any peer has the bytes).
+
+    Warm wave: each tenant seeds throwaway contexts of both lengths, then
+    shops its peer's — compiling every jit bucket the measured wave needs
+    (recompute + purchase-absorb shapes, decode, the spot-check sample
+    prefill).  The adversary is armed only after, so measured-wave corrupt
+    deliveries exercise verification against hot kernels.  Measured wave:
+    each tenant serves its own working set (recompute + write back), then
+    its successor's (the market's moment: buy, decline, or degrade).
+    Totals are wave-scoped; the fleet dollar figure adds the exchange's
+    collected fees (purchase prices net out tenant-to-tenant, fees are the
+    deadweight) so the three modes compare on real resources burned."""
+    import jax  # noqa: F401
+
+    from repro.core.perf_model import PerfModel, V100_X4_HF
+    from repro.core.pricing import AWS_PAPER
+    from repro.kvcache.faults import FaultInjector
+    from repro.market import Marketplace, MarketPlanner
+    from repro.serving import AlwaysReusePlanner, EngineConfig, Request, ServingEngine
+
+    tel = None
+    if telemetry:
+        from repro.obs import Telemetry
+
+        tel = Telemetry()
+    mp = Marketplace(
+        verify_rate=MARKET_VERIFY_RATE, flat_fee=MARKET_FLAT_FEE,
+        seed=seed, blacklist_after=1,
+    )
+    names = [f"t{i}" for i in range(MARKET_TENANTS)]
+    engines = []
+    for i, name in enumerate(names):
+        if mode == "never":
+            planner, session = AlwaysReusePlanner(), None
+        else:
+            planner = MarketPlanner(
+                AlwaysReusePlanner(), always=(mode == "always")
+            )
+            session = mp.join(name)
+        engines.append(ServingEngine(
+            cfg, params,
+            engine_cfg=EngineConfig(
+                max_slots=4, max_len=512, chunk_tokens=16,
+                cost_arch=cost_arch, admit_batch=1,
+            ),
+            planner=planner, pricing=AWS_PAPER, perf=PerfModel(V100_X4_HF),
+            telemetry=tel, telemetry_replica=i, market=session,
+        ))
+    for ts in mp.tenants.values():
+        # production write-premium pricing (see the knob comment): the ask
+        # tracks each entry's stamped recompute value, not its byte count
+        ts.write_premium = MARKET_WRITE_PREMIUM
+        ts.expected_sales = MARKET_EXPECTED_SALES
+
+    rng = np.random.default_rng(seed + 3000)
+    tok = lambda L: list(map(int, rng.integers(0, cfg.vocab, L)))  # noqa: E731
+    own = [
+        {"long": [tok(MARKET_CTX_LEN) for _ in range(MARKET_LONGS)],
+         "short": [tok(MARKET_SHORT_LEN) for _ in range(MARKET_SHORTS)]}
+        for _ in names
+    ]
+    warm_ctx = [
+        {"long": tok(MARKET_CTX_LEN), "short": tok(MARKET_SHORT_LEN)}
+        for _ in names
+    ]
+    rid = [0] * len(names)  # per-tenant request ids
+
+    def wave(i, ctxs):
+        eng, base = engines[i], engines[i].clock.now
+        for k, ctx in enumerate(ctxs):
+            eng.submit(Request(
+                req_id=rid[i], context_tokens=ctx,
+                prompt_tokens=tok(MARKET_PROMPT), max_new_tokens=MARKET_NEW,
+                arrival_s=base + 0.05 * k,
+            ))
+            rid[i] += 1
+        eng.run()
+
+    # warm: seed own throwaways, then shop the successor's (honest trades —
+    # the purchase path's buckets compile here, under every mode's planner)
+    for i in range(len(names)):
+        wave(i, [warm_ctx[i]["long"], warm_ctx[i]["short"]])
+    for i in range(len(names)):
+        j = (i + 1) % len(names)
+        wave(i, [warm_ctx[j]["long"], warm_ctx[j]["short"]])
+
+    warm_jit = [dict(e.packed_stats()["jit"]) for e in engines]
+    warm_cost = [e.summary().total_cost for e in engines]
+    warm_fees = mp.settlement.fees_collected
+    warm_purchases, warm_failed = mp.purchases, mp.failed_purchases
+    warm_blocked, warm_quotes = mp.corrupt_blocked, mp.quotes_served
+    warm_spend = sum(e.market_spend for e in engines)
+    n_warm = [len(e.records) for e in engines]
+
+    if mode != "never":
+        inj = FaultInjector(seed=seed + MARKET_ADV_SEED)
+        inj.arm(corrupt_rate=1.0)
+        mp.arm_adversary(names[-1], inj)
+
+    # measured: own working set first (recompute + write back everywhere),
+    # then the successor's — longs before shorts, so a tenant facing the
+    # adversary meets it on a purchase-worthy context and the blacklist
+    # covers the rest of its set identically under every mode
+    for i in range(len(names)):
+        wave(i, own[i]["long"] + own[i]["short"])
+    for i in range(len(names)):
+        j = (i + 1) % len(names)
+        wave(i, own[j]["long"] + own[j]["short"])
+
+    records = [
+        (i, r) for i, (e, k) in enumerate(zip(engines, n_warm))
+        for r in e.records[k:]
+    ]
+    cost = sum(e.summary().total_cost - w for e, w in zip(engines, warm_cost))
+    fees = mp.settlement.fees_collected - warm_fees
+    jit_misses = sum(
+        e.packed_stats()["jit"]["misses"] - w["misses"]
+        for e, w in zip(engines, warm_jit)
+    )
+    out = {
+        "mode": mode,
+        "n_requests": len(records),
+        "n_tenants": len(names),
+        "purchases": mp.purchases - warm_purchases,
+        "failed_purchases": mp.failed_purchases - warm_failed,
+        "quotes_served": mp.quotes_served - warm_quotes,
+        "corrupt_blocked": mp.corrupt_blocked - warm_blocked,
+        "corrupt_served": mp.corrupt_served,
+        "adversary_blacklisted": bool(
+            mp.reputation.is_blacklisted(names[-1])
+        ),
+        "market_spend": sum(e.market_spend for e in engines) - warm_spend,
+        "fees_collected": fees,
+        "engine_cost": cost,
+        # the comparison figure: real resources burned fleet-wide (tenant
+        # purchase prices net to zero; the exchange's fee take does not)
+        "total_cost": cost + fees,
+        "settlement_residual": mp.settlement.conservation_residual(),
+        "reuse_hits": sum(
+            1 for _, r in records if r.action in ("load", "partial")
+        ),
+        "jit_misses": jit_misses,
+        "mean_ttft_s": float(np.mean([r.ttft_s for _, r in records])),
+        "accounts": dict(mp.settlement.accounts),
+    }
+    lane = None
+    if tel is not None:
+        for i, eng in enumerate(engines):
+            tel.collect_engine(eng, replica=i)
+        residuals = {
+            name: tel.check(eng.summary(), replica=i)
+            for i, (name, eng) in enumerate(zip(names, engines))
+        }
+        residuals["settlement"] = {
+            "double_entry": mp.settlement.conservation_residual()
+        }
+        lane = _telemetry_lane(tel, residuals)
+        lane["market"] = mp.stats()
+    return out, lane, {(i, r.req_id): r.tokens for i, r in records}
+
+
 def run(
     n_burst: int = 24,
     n_steady: int = 24,
@@ -900,6 +1105,34 @@ def run(
     )
     results["workloads"]["chaos"] = chaos
     telemetry["chaos"] = tel_lane
+    # marketplace phase: three tenant economies over the same workload —
+    # cost-aware buying must beat BOTH baselines on fleet dollars, with the
+    # adversarial seller caught (never served) and tokens bit-identical to
+    # pure recompute across all three
+    mkt, tel_lane, mtoks = _serve_market(
+        cfg, params, cost_arch=cost_arch, seed=seed, mode="market",
+        telemetry=True,
+    )
+    never, _, ntoks = _serve_market(
+        cfg, params, cost_arch=cost_arch, seed=seed, mode="never",
+    )
+    always, _, atoks = _serve_market(
+        cfg, params, cost_arch=cost_arch, seed=seed, mode="always",
+    )
+    assert mtoks == ntoks and atoks == ntoks, (
+        "marketplace modes generated different tokens than pure recompute"
+    )
+    results["workloads"]["market"] = {
+        "market": mkt, "never_buy": never, "always_buy": always,
+        "token_identity": True,
+    }
+    telemetry["market"] = tel_lane
+    results["speedup"]["market_vs_never_cost"] = (
+        never["total_cost"] / max(mkt["total_cost"], 1e-12)
+    )
+    results["speedup"]["market_vs_always_cost"] = (
+        always["total_cost"] / max(mkt["total_cost"], 1e-12)
+    )
 
     results["config"] = {
         "arch": arch, "cost_arch": cost_arch, "slots": slots,
@@ -915,6 +1148,14 @@ def run(
         "n_chaos": n_chaos, "chaos_fail_rate": CHAOS_FAIL_RATE,
         "chaos_corrupt_rate": CHAOS_CORRUPT_RATE,
         "chaos_cost_ceiling": CHAOS_COST_CEILING,
+        "market_tenants": MARKET_TENANTS,
+        "market_ctx_len": MARKET_CTX_LEN,
+        "market_short_len": MARKET_SHORT_LEN,
+        "market_longs": MARKET_LONGS, "market_shorts": MARKET_SHORTS,
+        "market_write_premium": MARKET_WRITE_PREMIUM,
+        "market_expected_sales": MARKET_EXPECTED_SALES,
+        "market_verify_rate": MARKET_VERIFY_RATE,
+        "market_flat_fee": MARKET_FLAT_FEE,
     }
     # the affinity lane's span trees, for the optional Perfetto export (the
     # docs/OBSERVABILITY.md walkthrough reads exactly this trace)
@@ -977,7 +1218,7 @@ def main() -> List[str]:
 
     lines = []
     for name, modes in res["workloads"].items():
-        if name in ("decode", "rag", "unified", "cluster", "chaos"):
+        if name in ("decode", "rag", "unified", "cluster", "chaos", "market"):
             continue
         p, s = modes["packed"], modes["single"]
         lines.append(
@@ -1032,6 +1273,20 @@ def main() -> List[str]:
         f"(ceiling x{h['cost_ceiling']:.1f}), "
         f"retry spend ${h['retry_dollars']:.6f}, "
         f"{h['jit_misses']} steady-state recompiles"
+    )
+    mw = res["workloads"]["market"]
+    m = mw["market"]
+    lines.append(
+        f"market: cost-aware ${m['total_cost']:.6f} fleet "
+        f"({m['purchases']} purchases, {m['corrupt_blocked']} corrupt "
+        f"blocked, blacklisted={m['adversary_blacklisted']}) vs never-buy "
+        f"${mw['never_buy']['total_cost']:.6f} "
+        f"({res['speedup']['market_vs_never_cost']:.2f}x) and always-buy "
+        f"${mw['always_buy']['total_cost']:.6f} "
+        f"({res['speedup']['market_vs_always_cost']:.2f}x); tokens "
+        f"identical={mw['token_identity']}, "
+        f"{m['jit_misses']} steady-state recompiles, settlement residual "
+        f"{m['settlement_residual']:.1e}"
     )
     for lane, snap_lane in telemetry.items():
         led = snap_lane["ledger"]

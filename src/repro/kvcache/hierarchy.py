@@ -712,6 +712,14 @@ class TieredStore:
         # lookup result (e.g. the engine's prefetch pass) revalidate with it
         # instead of re-walking the trie at admission.
         self.trie_version = 0
+        # Delta-gossip surface (serving/cluster.py): an append-only log of
+        # digest hashes in insertion order.  Puts append; removals
+        # (evict/discard) bump ``digest_epoch`` and snapshot the log back to
+        # the live set — bloom bits cannot be cleared, so a removal forces
+        # the consumer's next gossip tick to rebuild from scratch, while
+        # put-only windows ship just the add-set since the last cursor.
+        self.digest_epoch = 0
+        self._digest_log: List[str] = []
         # Migration priority queue: (due_s, seq, entry_id) min-heap keyed by
         # each entry's predicted band-crossing time — reuse frequency
         # uses/age decays monotonically between touches, so the instant its
@@ -860,6 +868,10 @@ class TieredStore:
         # surfaced for telemetry: a dedup'd shared-tier put moved zero bytes,
         # and the ledger records that saving as an explicit zero-$ entry
         self.last_put_handle = handle
+        self._digest_log.extend(e.chain)
+        self._digest_log.extend(e.content_chunks)
+        if e.content_key is not None:
+            self._digest_log.append(e.content_key)
         return entry_id, (handle.delay_s if sync else 0.0)
 
     @staticmethod
@@ -1195,6 +1207,8 @@ class TieredStore:
         self._mig_next.pop(victim.entry_id, None)
         self.trie_version += 1
         self.evictions += 1
+        self.digest_epoch += 1
+        self._digest_log = self.digest_hashes()
         return True
 
     def discard(self, entry_id: str) -> bool:
@@ -1214,6 +1228,8 @@ class TieredStore:
         self._mig_next.pop(entry_id, None)
         self.trie_version += 1
         self.discards += 1
+        self.digest_epoch += 1
+        self._digest_log = self.digest_hashes()
         return True
 
     def digest_hashes(self) -> List[str]:
@@ -1228,6 +1244,14 @@ class TieredStore:
             if e.content_key is not None:
                 out.append(e.content_key)
         return out
+
+    def digest_view(self) -> Tuple[int, List[str]]:
+        """(epoch, hash log) for delta gossip.  Within one epoch the log only
+        grows, so a consumer holding (epoch, cursor) applies ``log[cursor:]``
+        as an add-set; an epoch change means a removal happened and the
+        consumer must rebuild its digest from the full log (which removals
+        re-snapshot to exactly the live ``digest_hashes()`` set)."""
+        return self.digest_epoch, self._digest_log
 
     # ------------------------------------------------------------------ #
     def stats(self) -> Dict[str, Any]:

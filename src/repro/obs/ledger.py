@@ -62,6 +62,10 @@ class LedgerEntry:
 class CostLedger:
     """Append-mostly entry log + the aggregations consumers ask of it."""
 
+    # subclasses may extend (e.g. the marketplace SettlementLedger adds
+    # a "market" category for peer-to-peer purchase flows)
+    CATEGORIES = CATEGORIES
+
     def __init__(self) -> None:
         self.entries: List[LedgerEntry] = []
         # storage "hold" entries are a settlement, not a log: recomputed
@@ -81,7 +85,7 @@ class CostLedger:
         nbytes: float = 0.0,
         kind: Optional[str] = None,
     ) -> None:
-        assert category in CATEGORIES, category
+        assert category in self.CATEGORIES, category
         self.entries.append(
             LedgerEntry(
                 category=category, activity=activity, dollars=float(dollars),
@@ -123,7 +127,7 @@ class CostLedger:
 
     def totals(self, *, replica: Optional[int] = None) -> Dict[str, float]:
         """category -> dollars (optionally one replica's share)."""
-        out = {c: 0.0 for c in CATEGORIES}
+        out = {c: 0.0 for c in self.CATEGORIES}
         for e in self.all_entries():
             if replica is not None and e.replica != replica:
                 continue

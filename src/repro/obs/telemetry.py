@@ -130,6 +130,23 @@ class Telemetry:
         self._m_crashes = r.counter(
             "replica_crashes_total", "Replicas lost mid-run", ("replica",)
         )
+        self._m_purchases = r.counter(
+            "kv_purchases_total", "Marketplace KV purchases settled",
+            ("replica", "seller"),
+        )
+        self._m_purchased_bytes = r.counter(
+            "kv_purchased_bytes_total", "Bytes bought from marketplace peers",
+            ("replica", "seller"),
+        )
+        self._m_verifications = r.counter(
+            "seller_verifications_total",
+            "Purchased-payload verifications (checksum and/or spot check)",
+            ("replica", "ok"),
+        )
+        self._m_blacklists = r.counter(
+            "sellers_blacklisted_total",
+            "Sellers ejected for corrupt deliveries", ("seller",),
+        )
 
     # ------------------------------------------------------------------ #
     # Event-driven feed (engines call this from step())
@@ -182,6 +199,25 @@ class Telemetry:
             self._m_degraded.inc(replica=replica)
         elif isinstance(e, ev.ReplicaCrashed):
             self._m_crashes.inc(replica=e.replica)
+        elif isinstance(e, ev.KVPurchased):
+            self._m_purchases.inc(replica=replica, seller=e.seller)
+            self._m_purchased_bytes.inc(
+                e.nbytes, replica=replica, seller=e.seller
+            )
+            # purchase dollars settle in the marketplace's own
+            # SettlementLedger (buyer debit == seller credit + fee at 1e-9);
+            # a zero-dollar marker here keeps the bytes queryable per
+            # request without double-billing the engine's conservation law
+            self.ledger.add(
+                "transfer", "kv_purchase", 0.0, replica=replica,
+                req_id=e.req_id, tier=e.tier, nbytes=e.nbytes, kind="load",
+            )
+        elif isinstance(e, ev.SellerVerified):
+            self._m_verifications.inc(
+                replica=replica, ok="ok" if e.ok else "corrupt"
+            )
+        elif isinstance(e, ev.SellerBlacklisted):
+            self._m_blacklists.inc(seller=e.seller)
         elif isinstance(e, ev.RequestRouted):
             self._m_routed.inc(replica=replica)
         elif isinstance(e, ev.ReplicaRebalanced):

@@ -86,6 +86,10 @@ class ClusterConfig:
     # Router view: expected per-request service time used to estimate the
     # queue wait of a replica with no free capacity.
     est_service_s: float = 0.05
+    # Tenant tags, one per replica (marketplace runs: each replica serves a
+    # tenant, and its shared-tier namespace carries the tenant's name so
+    # dedup'd bytes stay attributable).  None = anonymous "r{i}" namespaces.
+    tenants: Optional[List[str]] = None
 
 
 class ServingCluster:
@@ -112,10 +116,15 @@ class ServingCluster:
         trace=None,
         on_token=None,
         telemetry=None,
+        market=None,
     ):
         self.cc = cluster_cfg or ClusterConfig()
         self.ec = engine_cfg or EngineConfig()
         self.trace = trace
+        # Marketplace (repro.market.Marketplace): each replica joins as its
+        # tenant; a MarketPlanner built by planner_factory gets its session
+        # bound here.  None = no market (the default cluster, unchanged).
+        self.market = market
         # obs.Telemetry: replica engines feed their own events from step();
         # the cluster feeds ONLY its cluster-level events (routing/rebalance)
         # plus gossip ticks, so nothing is double-counted
@@ -136,6 +145,12 @@ class ServingCluster:
             else None
         )
 
+        self.tenants: List[str] = (
+            list(self.cc.tenants)
+            if self.cc.tenants is not None
+            else [f"r{i}" for i in range(n)]
+        )
+        assert len(self.tenants) == n, (self.tenants, n)
         self.replicas: List[ServingEngine] = [
             self._build_replica(
                 i, cfg, params, specs, planner_factory, pricing, perf, on_token
@@ -145,7 +160,12 @@ class ServingCluster:
 
         self._alive: List[bool] = [True] * n
         self._digests: List[Optional[BloomDigest]] = [None] * n
+        # delta gossip: replica -> (store digest_epoch, log cursor) at the
+        # last tick, so put-only windows ship just the add-set
+        self._digest_state: Dict[int, Tuple[int, int]] = {}
         self.gossip_ticks = 0
+        self.gossip_full_syncs = 0  # ticks that had to rebuild a digest
+        self.gossip_delta_hashes = 0  # hashes shipped as deltas instead
         self._next_gossip = (
             self.cc.gossip_interval_s if self.cc.gossip_interval_s > 0
             else float("inf")
@@ -201,7 +221,7 @@ class ServingCluster:
         for spec in specs:
             if self.core is not None and spec.name == self.cc.shared_tier:
                 b = SharedTierBackend(
-                    spec.name, core=self.core, namespace=f"r{i}",
+                    spec.name, core=self.core, namespace=self.tenants[i],
                     transfer=transfer, clock=clock, faults=self.ec.faults,
                 )
             else:
@@ -215,11 +235,22 @@ class ServingCluster:
                 b = ConcurrencyLimitedBackend(b, spec.concurrency, clock=clock)
             backends[spec.name] = b
 
+        planner = planner_factory() if planner_factory else None
+        session = None
+        if self.market is not None:
+            session = self.market.join(self.tenants[i])
+            if (
+                planner is not None
+                and getattr(planner, "session", False) is None
+            ):
+                # a MarketPlanner built bare by the factory shops through
+                # this replica's own session
+                planner.session = session
         return ServingEngine(
             cfg,
             params,
             engine_cfg=self.ec,
-            planner=planner_factory() if planner_factory else None,
+            planner=planner,
             backends=backends,
             pricing=pricing,
             perf=perf,
@@ -228,6 +259,7 @@ class ServingCluster:
             on_token=((lambda e, _i=i: on_token(_i, e)) if on_token else None),
             telemetry=self.telemetry,
             telemetry_replica=i,
+            market=session,
         )
 
     # ------------------------------------------------------------------ #
@@ -384,22 +416,42 @@ class ServingCluster:
     # Gossip
     # ------------------------------------------------------------------ #
     def gossip_now(self) -> None:
-        """Rebuild every live replica's bloom digest from its store's hash
-        surface.  Pure host-side work: no jit traffic, so steady-state
-        serving compiles nothing extra (asserted in the cluster bench)."""
+        """Refresh every live replica's bloom digest from its store's hash
+        surface — incrementally.  Bloom adds are idempotent and commutative,
+        so a put-only window ships just the ADD-SET since the last tick
+        (``TieredStore.digest_view``); a removal (evict/discard) bumps the
+        store's digest epoch — bloom bits cannot be cleared — forcing one
+        full rebuild, after which deltas resume.  Either way the resulting
+        bits are identical to a from-scratch rebuild every tick (the
+        staleness-equivalence test in tests/test_cluster.py).  Pure
+        host-side work: no jit traffic, so steady-state serving compiles
+        nothing extra (asserted in the cluster bench)."""
+        nbytes = 0.0
         for i, eng in enumerate(self.replicas):
             if not self._alive[i]:
                 continue
-            d = BloomDigest(self.cc.digest_bits, self.cc.digest_hashes)
-            d.update(eng.store.digest_hashes())
-            self._digests[i] = d
+            epoch, log = eng.store.digest_view()
+            state = self._digest_state.get(i)
+            d = self._digests[i]
+            if d is None or state is None or state[0] != epoch:
+                d = BloomDigest(self.cc.digest_bits, self.cc.digest_hashes)
+                d.update(log)
+                self._digests[i] = d
+                self.gossip_full_syncs += 1
+                nbytes += self.cc.digest_bits / 8.0
+            else:
+                added = log[state[1]:]
+                if added:
+                    d.update(added)
+                    self.gossip_delta_hashes += len(added)
+                    # delta gossip ships the new hash ids, not the bitmap
+                    nbytes += 16.0 * len(added)
+            self._digest_state[i] = (epoch, len(log))
         self.gossip_ticks += 1
         if self.telemetry is not None:
-            # digests travel ~bits/8 bytes per live replica, host-side and
-            # unbilled: a zero-dollar ledger entry records the traffic
-            self.telemetry.note_gossip(
-                nbytes=sum(self._alive) * self.cc.digest_bits / 8.0
-            )
+            # digest traffic is host-side and unbilled: a zero-dollar ledger
+            # entry records the (now mostly delta-sized) bytes on the wire
+            self.telemetry.note_gossip(nbytes=nbytes)
 
     # ------------------------------------------------------------------ #
     # Rebalancing (copy-then-keep)
@@ -507,6 +559,7 @@ class ServingCluster:
         assert self._alive[idx], f"replica {idx} already removed"
         self._alive[idx] = False
         self._digests[idx] = None
+        self._digest_state.pop(idx, None)
         released = 0
         for b in self.replicas[idx].backends.values():
             rel = getattr(b, "release_namespace", None)

@@ -166,6 +166,11 @@ class EngineConfig:
     # backoff; retries only while expected retry $ beats marginal recompute
     # $).  None = RetryPolicy() defaults.
     retry_policy: Optional[RetryPolicy] = None
+    # Min-cacheable-size admission (the production prompt-cache rule from
+    # SNIPPETS.md): contexts shorter than this many tokens are never written
+    # back — a tiny entry's storage + write overhead can't repay itself.  0
+    # (default) keeps the existing chunk_tokens floor and golden parity.
+    min_cache_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -228,6 +233,7 @@ class ServingEngine:
         on_token=None,
         telemetry=None,
         telemetry_replica: int = 0,
+        market=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -291,8 +297,20 @@ class ServingEngine:
             pricing=self.pricing,
             perf=self.perf,
             write_back=self.ec.reuse_enabled and self.ec.store_write_back,
-            min_store_tokens=self.ec.chunk_tokens,
+            min_store_tokens=max(self.ec.chunk_tokens, self.ec.min_cache_tokens),
         )
+        # Marketplace session (repro.market.MarketSession), duck-typed so the
+        # engine never imports the market package.  Binding publishes this
+        # engine's store as the tenant's catalog and hands the market the
+        # bit-exactness oracle (market_spot_check).  None = no market; every
+        # plan and token is exactly what it was before.
+        self.market = market
+        if market is not None:
+            market.bind_engine(self)
+            # a MarketPlanner built without an explicit session inherits
+            # this engine's (duck-typed: only planners that can buy have one)
+            if getattr(self.planner, "session", "no") is None:
+                self.planner.session = market
         self.queue = AdmissionQueue()
         self.slots = [Slot(i) for i in range(self.ec.max_slots)]
         self.records: List[RequestRecord] = []
@@ -405,6 +423,10 @@ class ServingEngine:
         self.degraded_requests = 0  # admissions that fell back to recompute
         self.fetch_wasted_s = 0.0  # time burned by failed attempts + backoff
         self.fetch_wasted_bytes = 0.0  # transfer bytes charged but unusable
+        # marketplace observability (None market = all stay 0)
+        self.market_purchases = 0  # plans served with bought peer KV
+        self.market_failed = 0  # purchases that degraded to recompute
+        self.market_spend = 0.0  # buyer dollars settled through the market
 
     # ------------------------------------------------------------------ #
     # jit'd compute
@@ -706,7 +728,9 @@ class ServingEngine:
     # -- per-request (fallback) execution ------------------------------- #
     def _admit_single(self, req: Request, slot: Slot, events: List[ev.Event]) -> bool:
         a = self._plan_admission(req, slot, events)
-        if a.plan.loads_kv and a.lookup.entry is not None:
+        if a.plan.market is not None:
+            self._market_fetch(a, events)
+        elif a.plan.loads_kv and a.lookup.entry is not None:
             self._fetch_kv_resilient(a, events)
         if a.artifact is not None:
             load_s, prefill_s, logits, temp = self._execute_load(req, a, events)
@@ -746,7 +770,9 @@ class ServingEngine:
         token runs, outputs scattered back into each request's batch slot."""
         t0 = self.clock.now
         for a in admissions:
-            if a.plan.loads_kv and a.lookup.entry is not None:
+            if a.plan.market is not None:
+                self._market_fetch(a, events)
+            elif a.plan.loads_kv and a.lookup.entry is not None:
                 self._fetch_kv_resilient(a, events)
             self._release_prefetch(a.req.req_id)
             ctx = list(a.req.context_tokens)
@@ -806,7 +832,12 @@ class ServingEngine:
                 # record below.
                 events.append(
                     ev.KVLoaded(
-                        t_s=t0, req_id=a.req.req_id, tier=a.lookup.entry.tier,
+                        t_s=t0, req_id=a.req.req_id,
+                        tier=(
+                            a.lookup.entry.tier
+                            if a.lookup.entry is not None
+                            else (a.plan.tier or "market")
+                        ),
                         nbytes=a.nbytes, load_s=a.load_s,
                         matched_tokens=a.matched,
                     )
@@ -1249,6 +1280,94 @@ class ServingEngine:
         a.delay = wasted + delay
         a.matched = plan.matched_tokens
 
+    # -- marketplace: purchased KV --------------------------------------- #
+    def _market_fetch(self, a: "_Admission", events: List[ev.Event]) -> None:
+        """Execute a purchased plan (``ReusePlan.market``): delivery,
+        verification, and settlement run inside the marketplace; on success
+        a full-entry purchase is absorbed into this engine's own store so
+        repeat requests become local hits; on ANY failure (seller gone,
+        fetch error, failed verification) the request degrades to exact
+        recompute — tokens stay bit-identical either way."""
+        req, quote = a.req, a.plan.market
+        res = self.market.execute(
+            quote, req_id=req.req_id, now=self.clock.now,
+            context_tokens=req.context_tokens, replica=self._replica,
+        )
+        events.extend(res.events)
+        # the spot check ran on THIS engine's device: its GPU seconds are
+        # real compute this request caused, charged win or lose
+        a.rec.compute_cost += res.verify_cost
+        if not res.ok:
+            self.degraded_requests += 1
+            self.market_failed += 1
+            a.rec.degraded = True
+            a.artifact, a.nbytes, a.matched = None, 0.0, 0
+            a.delay = res.wasted_s
+            events.append(ev.DegradedToRecompute(
+                t_s=self.clock.now, req_id=req.req_id, tier=a.plan.tier,
+                entry_id=quote.entry_id, attempts=1, wasted_s=res.wasted_s,
+                reason=f"market:{res.reason}",
+            ))
+            return
+        a.artifact = res.artifact
+        a.nbytes = res.nbytes
+        a.matched = res.matched_tokens
+        a.delay = res.delay_s + res.verify_s
+        self.market_purchases += 1
+        self.market_spend += res.price
+        if self.ec.store_write_back and res.matched_tokens >= quote.n_tokens:
+            # full-entry purchase: absorb it locally (the artifact's rows
+            # cover exactly the matched prefix, so the stored identity is
+            # sound); partial matches are served but not stored
+            ctx = list(req.context_tokens[:res.matched_tokens])
+            saved = self._c_gpu_s * self.perf.t_prefill(self.cost_cfg, len(ctx))
+            with self._attr("market_absorb", req.req_id):
+                entry_id, _ = self.store.put(
+                    ctx, res.artifact, tier=self._store_tier(),
+                    saved_per_use=saved,
+                )
+            h = self.store.last_put_handle if entry_id is not None else None
+            if h is not None and h.dedup:
+                # the absorbed copy deduped against bytes already in the
+                # shared core: book the zero-dollar KVShare credit for the
+                # bytes the core did NOT have to duplicate
+                self.market.note_dedup(
+                    self.store.entries[entry_id].nbytes,
+                    req_id=req.req_id, replica=self._replica,
+                )
+            self._emit_migrations(events)
+            if entry_id is not None:
+                e = self.store.entries[entry_id]
+                events.append(ev.StoreWriteBack(
+                    t_s=self.clock.now, req_id=req.req_id,
+                    entry_id=entry_id, tier=e.tier, nbytes=e.nbytes,
+                ))
+
+    def market_spot_check(self, context_tokens, artifact, n_tokens: int):
+        """Bit-exactness oracle for purchased KV: prefill the first
+        ``n_tokens`` of the context fresh and compare the purchased rows
+        exactly (both sides canonicalized through the same slot layout).
+        Returns (ok, verify_s, verify_cost) — the sample prefill's modeled
+        GPU seconds and dollars, which the caller charges to the request."""
+        n = int(min(n_tokens, len(context_tokens)))
+        if n <= 0:
+            return True, 0.0, 0.0
+        tokens = jnp.asarray([list(context_tokens[:n])], jnp.int32)
+        temp = self.api.init_state(self.cfg, 1, self.ec.max_len)
+        _, fresh = self._jit_prefill(self.params, tokens, temp)
+        ref = paged.extract_slot(self.cfg, fresh, 0, n)
+        temp = self.api.init_state(self.cfg, 1, self.ec.max_len)
+        temp = paged.insert_slot(self.cfg, temp, 0, artifact, n_tokens=n)
+        got = paged.extract_slot(self.cfg, temp, 0, n)
+        ok = all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(
+                jax.tree_util.tree_leaves(ref), jax.tree_util.tree_leaves(got)
+            )
+        )
+        verify_s = self.perf.t_prefill(self.cost_cfg, n)
+        return bool(ok), verify_s, self._c_gpu_s * verify_s
+
     def _write_back(self, req: Request, artifact: Any, events: List[ev.Event]) -> None:
         ctx = list(req.context_tokens)
         saved = self._c_gpu_s * self.perf.t_prefill(self.cost_cfg, len(ctx))
@@ -1257,6 +1376,15 @@ class ServingEngine:
                 ctx, artifact, tier=self._store_tier(), saved_per_use=saved
             )
         h = self.store.last_put_handle if entry_id is not None else None
+        if h is not None and h.dedup and self.market is not None:
+            # KVShare multi-tenant dedup: another tenant already holds these
+            # exact bytes in the shared core — settle the skipped upload as
+            # a zero-dollar market credit carrying the SAVED bytes (the
+            # handle's nbytes is bytes moved, which a dedup makes zero)
+            self.market.note_dedup(
+                self.store.entries[entry_id].nbytes,
+                req_id=req.req_id, replica=self._replica,
+            )
         if self.telemetry is not None and h is not None and h.dedup:
             # a content-addressed shared tier already held these bytes: no
             # upload happened, no fee accrued — record the dedup'd write-back
@@ -1389,7 +1517,11 @@ class ServingEngine:
             load_s = a.delay
         events.append(
             ev.KVLoaded(
-                t_s=self.clock.now, req_id=req.req_id, tier=entry.tier,
+                t_s=self.clock.now, req_id=req.req_id,
+                tier=(
+                    entry.tier if entry is not None
+                    else (a.plan.tier or "market")
+                ),
                 nbytes=a.nbytes, load_s=load_s, matched_tokens=matched,
             )
         )
@@ -1638,6 +1770,9 @@ class ServingEngine:
         fused_out = None
         if a.plan.action == "fused":
             fused_out = self._fetch_fused_sources(a, events)
+        elif a.plan.market is not None:
+            self._market_fetch(a, events)
+            self._release_prefetch(req.req_id)
         elif a.plan.loads_kv and a.lookup.entry is not None:
             self._fetch_kv_resilient(a, events)
             self._release_prefetch(req.req_id)
@@ -1705,7 +1840,11 @@ class ServingEngine:
                 ),
             )
             events.append(ev.KVLoaded(
-                t_s=t0, req_id=req.req_id, tier=a.lookup.entry.tier,
+                t_s=t0, req_id=req.req_id,
+                tier=(
+                    a.lookup.entry.tier if a.lookup.entry is not None
+                    else (a.plan.tier or "market")
+                ),
                 nbytes=a.nbytes, load_s=a.delay, matched_tokens=matched,
             ))
             tokens = np.asarray(ctx[matched:] + prompt, np.int32)

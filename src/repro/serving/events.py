@@ -211,6 +211,46 @@ class DegradedToRecompute(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class KVPurchased(Event):
+    """The request's stored-KV fetch was bought from a marketplace peer
+    instead of served from the engine's own store (``repro.market``).  The
+    purchase settled — buyer debited, seller credited — through the
+    ``SettlementLedger``; ``price`` is the buyer's total spend including the
+    market's transaction fee."""
+
+    seller: str  # tenant id of the selling peer
+    buyer: str
+    entry_id: str  # entry in the SELLER's store
+    tier: str  # seller-side tier the bytes came from
+    nbytes: float
+    price: float  # buyer spend in $ (ask x risk multiplier + flat fee)
+    matched_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SellerVerified(Event):
+    """A purchased payload was verified before being served: checksum
+    against the catalog stamp always, plus (``deep=True``) a spot
+    recompute of a prefix sample compared bit-exactly against the
+    delivered KV.  ``ok=False`` means the payload was corrupt/stale — it
+    was NEVER served; the request degrades to exact recompute."""
+
+    seller: str
+    entry_id: str
+    ok: bool
+    deep: bool  # the spot recompute-sample oracle ran (vs checksum-only)
+
+
+@dataclasses.dataclass(frozen=True)
+class SellerBlacklisted(Event):
+    """The reputation book ejected a seller caught serving corrupt/stale
+    payloads: no future quote will ever name it again."""
+
+    seller: str
+    corrupt_count: int  # failed verifications that earned the ejection
+
+
+@dataclasses.dataclass(frozen=True)
 class ReplicaCrashed(Event):
     """A replica died mid-run (req_id is -1: a cluster-level act).  Its
     in-flight and queued requests were harvested and resubmitted to the
@@ -227,7 +267,8 @@ AnyEvent = Union[
     RequestAdmitted, PlanChosen, BatchAdmitted, KVLoaded, FusedAdmitted,
     PrefillDone, StoreWriteBack, TokenEmitted, RequestFinished, ClockAdvanced,
     TierMigrated, RequestRouted, ReplicaRebalanced, FetchFailed, FetchRetried,
-    DegradedToRecompute, ReplicaCrashed,
+    DegradedToRecompute, KVPurchased, SellerVerified, SellerBlacklisted,
+    ReplicaCrashed,
 ]
 
 

@@ -108,6 +108,10 @@ class ReusePlan:
     # + selected recompute spans, kvcache.fusion.FusedSchedule); None for
     # the classic actions.
     fused: Optional[object] = None
+    # Marketplace purchases (repro.market): the accepted peer Quote when the
+    # plan's KV bytes are bought from another tenant's store rather than
+    # fetched from this engine's own; None for all local plans.
+    market: Optional[object] = None
 
     @property
     def loads_kv(self) -> bool:

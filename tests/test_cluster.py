@@ -518,3 +518,87 @@ class TestClusterServing:
         # the removed replica is invisible to routing and the idle predicate
         assert all(v.replica == 1 for v in cl.views())
         assert cl.idle
+
+
+# --------------------------------------------------------------------------- #
+# Delta gossip: incremental digests are bit-identical to full rebuilds
+# --------------------------------------------------------------------------- #
+class TestDeltaGossip:
+    def _check_equiv(self, cl):
+        """The staleness-equivalence invariant: after any gossip tick, each
+        live replica's incrementally-maintained digest has EXACTLY the bits
+        a from-scratch rebuild over the store's current hash surface would
+        produce — delta shipping changes the wire bytes, never the answer."""
+        for i, eng in enumerate(cl.replicas):
+            if not cl._alive[i]:
+                continue
+            fresh = BloomDigest(cl.cc.digest_bits, cl.cc.digest_hashes)
+            fresh.update(eng.store.digest_hashes())
+            assert cl._digests[i]._bits == fresh._bits, i
+
+    def test_delta_ticks_equal_full_rebuild(self):
+        cfg, params = ts._setup("qwen2-0.5b")
+        cl = ServingCluster(
+            cfg, params,
+            cluster_cfg=ClusterConfig(n_replicas=2),
+            engine_cfg=_cluster_ec(),
+            **_paper_hw(),
+        )
+        store = cl.replicas[0].store
+
+        cl.gossip_now()  # first tick: both replicas full-sync from scratch
+        self._check_equiv(cl)
+        base_full = cl.gossip_full_syncs
+        assert base_full == 2
+
+        # put-only window: every tick ships only the add-set, no resyncs
+        eids = []
+        for j in range(4):
+            eid, _ = store.put(
+                [j * 50 + k for k in range(32)], _art(j), tier="host_dram"
+            )
+            eids.append(eid)
+            cl.gossip_now()
+            self._check_equiv(cl)
+        assert cl.gossip_full_syncs == base_full
+        assert cl.gossip_delta_hashes > 0
+
+        # a removal (discard) bumps the digest epoch: bloom bits cannot be
+        # cleared, so the next tick full-rebuilds — and stays exact
+        assert store.discard(eids[1])
+        cl.gossip_now()
+        self._check_equiv(cl)
+        assert cl.gossip_full_syncs == base_full + 1
+
+        # an eviction is a removal too
+        assert store._evict_one("host_dram")
+        cl.gossip_now()
+        self._check_equiv(cl)
+        assert cl.gossip_full_syncs == base_full + 2
+
+        # and after a resync, deltas resume
+        deltas = cl.gossip_delta_hashes
+        store.put(list(range(900, 932)), _art(9), tier="host_dram")
+        cl.gossip_now()
+        self._check_equiv(cl)
+        assert cl.gossip_full_syncs == base_full + 2
+        assert cl.gossip_delta_hashes > deltas
+
+    def test_quiescent_ticks_ship_nothing(self):
+        """No store mutations between ticks => no hashes, no resyncs (the
+        steady-state wire cost of gossip is zero)."""
+        cfg, params = ts._setup("qwen2-0.5b")
+        cl = ServingCluster(
+            cfg, params,
+            cluster_cfg=ClusterConfig(n_replicas=2),
+            engine_cfg=_cluster_ec(),
+            **_paper_hw(),
+        )
+        cl.replicas[0].store.put(list(range(32)), _art(0), tier="host_dram")
+        cl.gossip_now()
+        full, deltas = cl.gossip_full_syncs, cl.gossip_delta_hashes
+        for _ in range(3):
+            cl.gossip_now()
+            self._check_equiv(cl)
+        assert cl.gossip_full_syncs == full
+        assert cl.gossip_delta_hashes == deltas

@@ -1,0 +1,454 @@
+"""KV marketplace: settlement conservation, reputation/blacklisting, ACL
+privacy, buy-vs-recompute planning, and the two-engine purchase pipeline —
+deterministic + hypothesis.  Token bit-identity is the acceptance bar: with
+the market on, every request's tokens equal the pure-recompute run's,
+whether the purchase succeeded, degraded, or was never attempted."""
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config, reduced_config
+from repro.core.perf_model import PerfModel, V100_X4_HF
+from repro.core.pricing import AWS_PAPER
+from repro.kvcache.faults import FaultInjector, payload_checksum
+from repro.kvcache.hierarchy import (
+    HostMemoryBackend,
+    SharedBackendCore,
+    SharedTierBackend,
+    TieredStore,
+    TierSpec,
+)
+from repro.kvcache.transfer import SimClock, TransferModel
+from repro.market import (
+    Marketplace,
+    MarketPlanner,
+    ReputationBook,
+    SettlementLedger,
+    TenantStore,
+)
+from repro.models import registry
+from repro.serving import (
+    AlwaysReusePlanner,
+    EngineConfig,
+    Request,
+    ServingEngine,
+)
+from repro.serving import events as ev
+
+
+# --------------------------------------------------------------------------- #
+# Fixtures
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced_config(get_config("llama-7b"))
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, ctx_len=64, prompt_len=8):
+    rng = np.random.default_rng(seed)
+    ctx = tuple(map(int, rng.integers(0, cfg.vocab, ctx_len)))
+    return [
+        Request(
+            req_id=i, context_tokens=ctx,
+            prompt_tokens=tuple(map(int, rng.integers(0, cfg.vocab, prompt_len))),
+            max_new_tokens=3, arrival_s=i * 0.01,
+        )
+        for i in range(n)
+    ]
+
+
+def _engine(cfg, params, *, market=None, planner=None, **ec_kw):
+    kw = dict(max_slots=2, max_len=128, chunk_tokens=16)
+    kw.update(ec_kw)
+    return ServingEngine(
+        cfg, params, engine_cfg=EngineConfig(**kw),
+        planner=planner, market=market,
+    )
+
+
+def _run(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    eng.last_events = list(eng.drain())
+    return {rec.req_id: rec.tokens for rec in eng.records}
+
+
+def _store(clock=None, cap_gb=1.0):
+    clock = clock or SimClock()
+    tr = TransferModel(PerfModel(V100_X4_HF), AWS_PAPER)
+    return TieredStore(
+        tiers=[TierSpec("host_dram", cap_gb)],
+        transfer=tr, clock=clock, chunk_tokens=4, pricing=AWS_PAPER,
+        backends={
+            "host_dram": HostMemoryBackend("host_dram", transfer=tr, clock=clock)
+        },
+    )
+
+
+def _art(i, floats=64):
+    return {"k": np.full((1, floats), float(i), np.float32)}
+
+
+# --------------------------------------------------------------------------- #
+# Settlement: double-entry conservation
+# --------------------------------------------------------------------------- #
+class TestSettlement:
+    def test_single_purchase_books_both_sides(self):
+        led = SettlementLedger(fee_rate=0.10, flat_fee=0.5)
+        price = led.buyer_price(2.0)
+        assert price == pytest.approx(2.5)
+        credit = led.settle_purchase(
+            buyer="a", seller="b", price=price, nbytes=100.0, entry_id="e0",
+        )
+        fee = led.fee_for(price)
+        assert fee == pytest.approx(0.5 + 0.10 * 2.0)
+        assert credit == pytest.approx(price - fee)
+        assert led.accounts["a"] == pytest.approx(-price)
+        assert led.accounts["b"] == pytest.approx(credit)
+        # category nets to exactly the fees (ledger rows mirror the accounts)
+        assert led.totals()["market"] == pytest.approx(fee)
+        assert led.assert_conserved(1e-9) <= 1e-9
+
+    def test_dedup_credit_moves_no_dollars(self):
+        led = SettlementLedger()
+        led.record_dedup_credit("a", 1234.0)
+        assert led.dedup_bytes == 1234.0 and led.n_dedup_credits == 1
+        assert led.totals()["market"] == 0.0
+        assert not led.accounts
+        led.assert_conserved(1e-9)
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        trades=st.lists(
+            st.tuples(
+                st.integers(0, 4),  # buyer
+                st.integers(0, 4),  # seller
+                st.floats(0.0, 1e3, allow_nan=False, allow_infinity=False),
+                st.floats(0.0, 1e6, allow_nan=False, allow_infinity=False),
+            ),
+            min_size=1, max_size=40,
+        ),
+        fee_rate=st.floats(0.0, 0.5),
+        flat_fee=st.floats(0.0, 1.0),
+    )
+    def test_conservation_under_random_trades(self, trades, fee_rate, flat_fee):
+        led = SettlementLedger(fee_rate=fee_rate, flat_fee=flat_fee)
+        for bi, si, ask, nb in trades:
+            led.settle_purchase(
+                buyer=f"t{bi}", seller=f"t{si}",
+                price=led.buyer_price(ask), nbytes=nb, entry_id="e",
+            )
+        assert led.assert_conserved(1e-9) <= 1e-9
+        assert led.debits == pytest.approx(led.credits + led.fees_collected)
+
+
+# --------------------------------------------------------------------------- #
+# Reputation: price-down then blacklist; blacklisted = never matched again
+# --------------------------------------------------------------------------- #
+class TestReputation:
+    def test_corrupt_delivery_blacklists(self):
+        book = ReputationBook(blacklist_after=1)
+        assert book.record_verification("s", ok=False) is True
+        assert book.is_blacklisted("s")
+        # repeat failures do not "re-blacklist" (the event fires once)
+        assert book.record_verification("s", ok=False) is False
+
+    def test_score_decays_and_recovers(self):
+        book = ReputationBook(blacklist_after=3, decay=0.5, recover=0.1)
+        book.record_verification("s", ok=False)
+        low = book.score("s")
+        assert low < 1.0 and not book.is_blacklisted("s")
+        assert book.price_multiplier("s") > 1.0
+        book.record_verification("s", ok=True)
+        assert book.score("s") > low
+
+    def test_blacklisted_seller_never_quoted(self):
+        mp = Marketplace()
+        store = _store()
+        toks = list(range(16))
+        store.put(toks, _art(1), tier="host_dram")
+        mp.register("s", TenantStore("s", store, pricing=AWS_PAPER))
+        assert mp.quote("b", toks) is not None
+        mp.reputation.record_verification("s", ok=False)
+        assert mp.reputation.is_blacklisted("s")
+        assert mp.quote("b", toks) is None
+
+    @settings(max_examples=30, deadline=None)
+    @given(outcomes=st.lists(st.booleans(), min_size=1, max_size=30))
+    def test_blacklist_is_permanent(self, outcomes):
+        """Once corrupt deliveries cross the threshold, no sequence of later
+        successes resurrects the seller."""
+        book = ReputationBook(blacklist_after=2)
+        dead_at = None
+        for i, ok in enumerate(outcomes):
+            book.record_verification("s", ok=ok)
+            if dead_at is None and book.is_blacklisted("s"):
+                dead_at = i
+            if dead_at is not None:
+                assert book.is_blacklisted("s")
+        assert (dead_at is not None) == (outcomes.count(False) >= 2)
+
+
+# --------------------------------------------------------------------------- #
+# ACL: a private entry is invisible to every other tenant
+# --------------------------------------------------------------------------- #
+class TestACL:
+    def test_private_entry_never_quoted(self):
+        mp = Marketplace()
+        store = _store()
+        toks = list(range(16))
+        eid, _ = store.put(toks, _art(1), tier="host_dram")
+        ts = TenantStore("s", store, pricing=AWS_PAPER)
+        mp.register("s", ts)
+        assert mp.quote("b", toks) is not None
+        ts.set_private(eid)
+        assert mp.quote("b", toks) is None
+        assert all(e.entry_id != eid for e in ts.catalog().entries)
+        ts.set_public(eid)
+        assert mp.quote("b", toks) is not None
+
+    def test_self_quotes_excluded(self):
+        """A tenant never buys its own entry — its store serves it for free."""
+        mp = Marketplace()
+        store = _store()
+        toks = list(range(16))
+        store.put(toks, _art(1), tier="host_dram")
+        mp.register("s", TenantStore("s", store, pricing=AWS_PAPER))
+        assert mp.quote("s", toks) is None
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        private=st.sets(st.integers(0, 5)),
+        probe=st.integers(0, 5),
+    )
+    def test_acl_filtering_is_exact(self, private, probe):
+        """Quote iff the probed context's entry is public: tenant B can never
+        fetch (or even see) tenant A's private entries."""
+        mp = Marketplace()
+        store = _store()
+        ts = TenantStore("a", store, pricing=AWS_PAPER)
+        mp.register("a", ts)
+        eids = {}
+        for i in range(6):
+            # disjoint contexts (different first token => different trie path)
+            toks = [i * 100 + j for j in range(8)]
+            eids[i], _ = store.put(toks, _art(i), tier="host_dram")
+        for i in private:
+            ts.set_private(eids[i])
+        q = mp.quote("b", [probe * 100 + j for j in range(8)])
+        if probe in private:
+            assert q is None
+        else:
+            assert q is not None and q.entry_id == eids[probe]
+
+
+# --------------------------------------------------------------------------- #
+# Quoting and the buy-vs-recompute decision
+# --------------------------------------------------------------------------- #
+class TestQuoting:
+    def test_ask_price_arithmetic(self):
+        store = _store()
+        toks = list(range(16))
+        eid, _ = store.put(toks, _art(1), tier="host_dram", saved_per_use=8.0)
+        ts = TenantStore(
+            "s", store, pricing=AWS_PAPER,
+            write_premium=0.25, expected_sales=4.0, margin=0.10,
+        )
+        e = store.entries[eid]
+        fee = AWS_PAPER.tier("host_dram").per_gb_transfer_fee * e.nbytes / 1e9
+        assert ts.ask_dollars(e) == pytest.approx(1.10 * fee + 0.25 * 8.0 / 4.0)
+
+    def test_longest_match_wins_then_price(self):
+        mp = Marketplace()
+        toks = list(range(32))
+        s_long, s_short = _store(), _store()
+        s_long.put(toks, _art(1), tier="host_dram", saved_per_use=100.0)
+        s_short.put(toks[:16], _art(2), tier="host_dram", saved_per_use=0.0)
+        mp.register("long", TenantStore("long", s_long, pricing=AWS_PAPER))
+        mp.register("short", TenantStore("short", s_short, pricing=AWS_PAPER))
+        q = mp.quote("b", toks)
+        # the longer (more expensive) match beats the cheaper shorter one
+        assert q.seller == "long" and q.matched_tokens == 32
+
+    def test_checksum_stamped_at_publication(self):
+        store = _store()
+        toks = list(range(16))
+        eid, _ = store.put(toks, _art(7), tier="host_dram")
+        ts = TenantStore("s", store, pricing=AWS_PAPER)
+        payload = store.backends["host_dram"].peek(eid)
+        assert ts.checksum(eid) == payload_checksum(payload)
+
+    def test_planner_flips_on_price(self, model):
+        """The cost-aware buy decision: free-ish quote wins, an exorbitant
+        flat fee loses to recompute — on the same workload."""
+        cfg, params = model
+        reqs = _requests(cfg, 2)
+        for flat_fee, expect_buy in ((0.0, True), (1e9, False)):
+            mp = Marketplace(flat_fee=flat_fee, verify_rate=1.0)
+            seller = _engine(
+                cfg, params, market=mp.join("s"),
+                planner=MarketPlanner(AlwaysReusePlanner()),
+            )
+            _run(seller, reqs[:1])
+            buyer = _engine(
+                cfg, params, market=mp.join("b"),
+                planner=MarketPlanner(AlwaysReusePlanner()),
+            )
+            _run(buyer, reqs[1:])
+            bought = buyer.market_purchases > 0
+            assert bought == expect_buy, (flat_fee, bought)
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end: the purchase pipeline over two engines
+# --------------------------------------------------------------------------- #
+class TestMarketServing:
+    def test_purchase_settles_and_tokens_bit_identical(self, model):
+        cfg, params = model
+        reqs = _requests(cfg, 3)
+        mp = Marketplace(verify_rate=1.0, seed=0)
+        seller = _engine(
+            cfg, params, market=mp.join("s"),
+            planner=MarketPlanner(AlwaysReusePlanner()),
+        )
+        _run(seller, reqs[:1])
+        assert len(seller.store.entries) == 1
+
+        buyer = _engine(
+            cfg, params, market=mp.join("b"),
+            planner=MarketPlanner(AlwaysReusePlanner()),
+        )
+        toks = _run(buyer, reqs[1:])
+        assert buyer.market_purchases == 1
+        assert buyer.market_spend > 0.0
+        # the bought entry was absorbed: the NEXT identical context loads
+        # locally instead of paying the market again
+        assert len(buyer.store.entries) == 1
+        actions = {r.req_id: (r.action, r.plan.tier) for r in buyer.records}
+        assert actions[1] == ("load", "market:s")
+        assert actions[2][0] == "load" and not actions[2][1].startswith("market")
+
+        # settlement: exact double-entry conservation, buyer debit == seller
+        # credit + fee
+        led = mp.settlement
+        assert led.assert_conserved(1e-9) <= 1e-9
+        assert led.accounts["b"] == pytest.approx(-buyer.market_spend)
+        assert led.accounts["s"] == pytest.approx(
+            buyer.market_spend - led.fees_collected
+        )
+        # seller-side mirror
+        assert mp.tenants["s"].sales == 1
+        assert mp.tenants["s"].revenue == pytest.approx(led.accounts["s"])
+
+        # acceptance bar: tokens bit-identical to pure recompute
+        ref = _engine(cfg, params)
+        ref_toks = _run(ref, reqs[1:])
+        assert toks == ref_toks
+
+        # engine events surfaced the trade
+        evs = [e for e in buyer.last_events if isinstance(e, ev.KVPurchased)]
+        assert len(evs) == 1 and evs[0].seller == "s" and evs[0].buyer == "b"
+
+    def test_adversary_blocked_blacklisted_and_exact(self, model):
+        """A dishonest seller (in-flight corruption via faults.FaultInjector)
+        is caught by verification, never served, blacklisted — and the buyer
+        still emits bit-identical tokens through degrade-to-recompute."""
+        cfg, params = model
+        reqs = _requests(cfg, 3)
+        mp = Marketplace(verify_rate=1.0, seed=0, blacklist_after=1)
+        seller = _engine(
+            cfg, params, market=mp.join("s"),
+            planner=MarketPlanner(AlwaysReusePlanner()),
+        )
+        _run(seller, reqs[:1])
+        inj = FaultInjector(seed=0)
+        inj.arm(corrupt_rate=1.0)
+        mp.arm_adversary("s", inj)
+
+        buyer = _engine(
+            cfg, params, market=mp.join("b"),
+            planner=MarketPlanner(AlwaysReusePlanner()),
+        )
+        toks = _run(buyer, reqs[1:])
+        assert mp.corrupt_served == 0
+        assert mp.corrupt_blocked == 1
+        assert mp.purchases == 0
+        assert mp.reputation.is_blacklisted("s")
+        assert buyer.market_failed == 1 and buyer.market_purchases == 0
+        # nothing settled for a blocked delivery
+        assert mp.settlement.n_purchases == 0
+        assert mp.settlement.assert_conserved(1e-9) <= 1e-9
+
+        ref = _engine(cfg, params)
+        assert toks == _run(ref, reqs[1:])
+
+        evs = buyer.last_events
+        bad = [e for e in evs if isinstance(e, ev.SellerVerified) and not e.ok]
+        assert len(bad) == 1
+        assert any(isinstance(e, ev.SellerBlacklisted) for e in evs)
+        assert any(
+            isinstance(e, ev.DegradedToRecompute)
+            and e.reason == "market:verify_failed"
+            for e in evs
+        )
+
+    def test_market_off_is_pure_parity(self, model):
+        """market=None: same planner chain, bit-identical tokens AND actions
+        to an engine that never heard of the marketplace."""
+        cfg, params = model
+        reqs = _requests(cfg, 3)
+        plain = _engine(cfg, params, planner=AlwaysReusePlanner())
+        toks_plain = _run(plain, reqs)
+        wrapped = _engine(
+            cfg, params, planner=MarketPlanner(AlwaysReusePlanner())
+        )
+        toks_wrapped = _run(wrapped, reqs)
+        assert toks_plain == toks_wrapped
+        assert [r.action for r in plain.records] == [
+            r.action for r in wrapped.records
+        ]
+        assert wrapped.market_purchases == 0
+
+    def test_dedup_credit_through_shared_core(self, model):
+        """KVShare: two tenants over ONE shared content-addressed core; the
+        second tenant's write-back of identical content moves zero bytes and
+        books a zero-dollar dedup credit in the settlement ledger."""
+        cfg, params = model
+        reqs = _requests(cfg, 2)
+        mp = Marketplace()
+        core = SharedBackendCore()
+        engines = []
+        for name in ("a", "b"):
+            clock = SimClock()
+            tr = TransferModel(PerfModel(V100_X4_HF), AWS_PAPER)
+            backends = {
+                "s3": SharedTierBackend(
+                    "s3", core=core, namespace=name, transfer=tr, clock=clock
+                )
+            }
+            eng = ServingEngine(
+                cfg, params,
+                engine_cfg=EngineConfig(
+                    max_slots=2, max_len=128, chunk_tokens=16,
+                    tier_capacities_gb={"s3": 1.0}, store_tier="s3",
+                ),
+                planner=MarketPlanner(AlwaysReusePlanner(), always=True),
+                backends=backends, clock=clock, transfer=tr,
+                market=mp.join(name),
+            )
+            engines.append(eng)
+        # same context through both tenants: B's write-back dedups against
+        # A's bytes already in the core
+        _run(engines[0], reqs[:1])
+        _run(engines[1], reqs[1:])
+        assert core.stats()["dedup_hits"] >= 1
+        assert mp.settlement.n_dedup_credits >= 1
+        assert mp.settlement.dedup_bytes > 0.0
+        assert mp.settlement.totals()["market"] == pytest.approx(
+            mp.settlement.fees_collected
+        )
+        mp.settlement.assert_conserved(1e-9)

@@ -401,3 +401,42 @@ def test_on_token_callback_order_matches_decode():
     assert by_req == {rec.req_id: rec.tokens for rec in eng.records}
     # off by default: no hook, no callbacks
     assert ServingEngine(cfg, params).on_token is None
+
+
+def test_min_cache_tokens_gates_write_back():
+    """``EngineConfig.min_cache_tokens``: contexts shorter than the floor are
+    never written back (they'd never repay a fetch), while the default (0)
+    leaves behavior untouched — tokens and actions bit-identical."""
+    cfg, params = _setup("llama-7b")
+    reqs = _requests(cfg, n=4, n_ctx=1, ctx_len=64)
+
+    eng_def, _, tok_def, act_def = _run(cfg, params, reqs,
+                                        planner=AlwaysReusePlanner())
+    assert len(eng_def.store.entries) >= 1  # 64 >= chunk floor: stored
+
+    # floor above the context length: nothing is ever stored, every
+    # request recomputes, tokens unchanged
+    eng_hi, _, tok_hi, act_hi = _run(
+        cfg, params, reqs, planner=AlwaysReusePlanner(),
+        min_cache_tokens=128,
+    )
+    assert len(eng_hi.store.entries) == 0
+    assert all(a == "recompute" for a in act_hi.values())
+    assert tok_hi == tok_def
+
+    # explicit 0 is the default: identical run
+    eng_z, _, tok_z, act_z = _run(
+        cfg, params, reqs, planner=AlwaysReusePlanner(),
+        min_cache_tokens=0,
+    )
+    assert tok_z == tok_def and act_z == act_def
+    assert len(eng_z.store.entries) == len(eng_def.store.entries)
+
+    # a floor at-or-below the context length stores normally (the gate is
+    # >=, and chunk_tokens already floors shorter contexts)
+    eng_eq, _, tok_eq, _ = _run(
+        cfg, params, reqs, planner=AlwaysReusePlanner(),
+        min_cache_tokens=64,
+    )
+    assert len(eng_eq.store.entries) == len(eng_def.store.entries)
+    assert tok_eq == tok_def
